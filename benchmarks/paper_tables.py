@@ -1,0 +1,130 @@
+"""Paper Tables 3/4/5 and Figures 7-10 from one OPAT sweep.
+
+  Table 3 — h(D)^{query}_{pschemes}: per-query mean load ratio across the
+            six partitioning schemes, per heuristic.
+  Table 4 — h(D)^{pscheme}_{qbatch}: per-scheme mean load ratio over the
+            query batch, per heuristic.
+  Table 5 — CC heuristic: Table-4 measure evaluated at the MIN-CC and
+            MAX-CC schemes (+ total CC counts).
+  Figures 7-10 — raw loads per (query, scheme, heuristic) vs L_ideal.
+
+The paper's qualitative claims this reproduces (EXPERIMENTS.md §Tables):
+  * MAX-SN >= MIN-SN >> RANDOM-SN on load ratio,
+  * on IMDB (unique labels) MAX-SN == MIN-SN exactly,
+  * MIN-CC schemes beat MAX-CC schemes,
+  * ties when total-CC difference < 5%.
+"""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from .common import (ALL_HEURISTICS, MAX_SN, MIN_SN, RANDOM_SN, SCHEMES,
+                     SweepResult, fmt_table,
+                     avg_load_ratio_across_schemes,
+                     avg_load_ratio_for_batch)
+
+
+def table3(sweep: SweepResult, out_dir: str) -> str:
+    queries = sorted({s.query for s in sweep.stats})
+    rows = []
+    for h in ALL_HEURISTICS:
+        row = [h.upper()]
+        for q in queries:
+            row.append(f"{avg_load_ratio_across_schemes(sweep.stats, q, h):.3f}")
+        rows.append(row)
+    _csv(os.path.join(out_dir, "table3.csv"), ["heuristic"] + queries, rows)
+    return fmt_table(rows, ["heuristic"] + queries)
+
+
+def table4(sweep: SweepResult, out_dir: str) -> str:
+    schemes = sorted({s.scheme for s in sweep.stats})
+    workloads = sorted({s.query.split(":")[0] for s in sweep.stats})
+    blocks = []
+    for wl in workloads:
+        sub = [s for s in sweep.stats if s.query.startswith(wl + ":")]
+        rows = []
+        for h in ALL_HEURISTICS:
+            row = [f"{wl}:{h.upper()}"]
+            for sc in schemes:
+                row.append(f"{avg_load_ratio_for_batch(sub, sc, h):.3f}")
+            rows.append(row)
+        blocks.append(fmt_table(rows, ["batch"] + schemes))
+        _csv(os.path.join(out_dir, f"table4_{wl}.csv"), ["batch"] + schemes, rows)
+    return "\n\n".join(blocks)
+
+
+def table5(sweep: SweepResult, out_dir: str) -> str:
+    workloads = sorted({s.query.split(":")[0] for s in sweep.stats})
+    rows = []
+    for wl in workloads:
+        ccs = {sc: cc for (w, sc), cc in sweep.total_cc.items() if w == wl}
+        min_cc = min(ccs, key=ccs.get)
+        max_cc = max(ccs, key=ccs.get)
+        sub = [s for s in sweep.stats if s.query.startswith(wl + ":")]
+        for h in (MAX_SN, MIN_SN):
+            rows.append([
+                wl, h.upper(),
+                f"{min_cc}({ccs[min_cc]})",
+                f"{avg_load_ratio_for_batch(sub, min_cc, h):.3f}",
+                f"{max_cc}({ccs[max_cc]})",
+                f"{avg_load_ratio_for_batch(sub, max_cc, h):.3f}",
+            ])
+    header = ["workload", "heuristic", "MIN-CC scheme", "ratio@MIN-CC",
+              "MAX-CC scheme", "ratio@MAX-CC"]
+    _csv(os.path.join(out_dir, "table5.csv"), header, rows)
+    return fmt_table(rows, header)
+
+
+def figs_loads(sweep: SweepResult, out_dir: str) -> str:
+    """Figures 7-10 raw data: #loads per (query, scheme, heuristic)."""
+    rows = []
+    for s in sorted(sweep.stats, key=lambda s: (s.query, s.scheme, s.heuristic)):
+        rows.append([s.query, s.scheme, s.heuristic, s.l_ideal, s.n_loads,
+                     f"{s.load_ratio:.3f}", s.n_answers,
+                     " ".join(map(str, s.loads))])
+    header = ["query", "scheme", "heuristic", "L_ideal", "loads", "ratio",
+              "answers", "load_sequence"]
+    _csv(os.path.join(out_dir, "figs_loads.csv"), header, rows)
+    return fmt_table([r[:7] for r in rows[:24]], header[:7]) + \
+        f"\n... ({len(rows)} rows total, full data in figs_loads.csv)"
+
+
+def validate_claims(sweep: SweepResult) -> List[str]:
+    """The paper's qualitative claims, checked mechanically."""
+    failures = []
+    queries = sorted({s.query for s in sweep.stats})
+    for q in queries:
+        mx = avg_load_ratio_across_schemes(sweep.stats, q, MAX_SN)
+        mn = avg_load_ratio_across_schemes(sweep.stats, q, MIN_SN)
+        rd = avg_load_ratio_across_schemes(sweep.stats, q, RANDOM_SN)
+        if not mx >= mn - 1e-9:
+            failures.append(f"MAX-SN < MIN-SN on {q}: {mx:.3f} vs {mn:.3f}")
+        if not mx >= rd - 1e-9:
+            failures.append(f"MAX-SN < RANDOM on {q}: {mx:.3f} vs {rd:.3f}")
+        if q.startswith("IMDB:") and abs(mx - mn) > 1e-9:
+            failures.append(f"IMDB MAX-SN != MIN-SN on {q} (unique labels)")
+    # MIN-CC >= MAX-CC per workload (when CC difference is significant)
+    for wl in sorted({s.query.split(":")[0] for s in sweep.stats}):
+        ccs = {sc: cc for (w, sc), cc in sweep.total_cc.items() if w == wl}
+        min_cc = min(ccs, key=ccs.get)
+        max_cc = max(ccs, key=ccs.get)
+        if ccs[max_cc] and (ccs[max_cc] - ccs[min_cc]) / ccs[max_cc] >= 0.05:
+            sub = [s for s in sweep.stats if s.query.startswith(wl + ":")]
+            lo = avg_load_ratio_for_batch(sub, min_cc, MAX_SN)
+            hi = avg_load_ratio_for_batch(sub, max_cc, MAX_SN)
+            if lo + 0.05 < hi:
+                failures.append(
+                    f"MIN-CC worse than MAX-CC on {wl}: {lo:.3f} vs {hi:.3f}")
+    return failures
+
+
+def _csv(path: str, header: List[str], rows: List[List]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)

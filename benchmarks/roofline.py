@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (written by launch/dryrun.py), prints the
+per-(arch x shape x mesh) three-term roofline with the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and per-device memory.
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import fmt_table
+
+GIB = 1024 ** 3
+
+
+def load_cells(dry_dir: str, tag: str = "baseline") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows_for(cells: List[Dict]) -> List[List]:
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append([c["arch"], c["shape"], c.get("mesh", "?"),
+                         "SKIP", "-", "-", "-", "-", "-", "-"])
+            continue
+        if c.get("status") != "ok":
+            rows.append([c["arch"], c["shape"], c.get("mesh", "?"),
+                         "ERROR", "-", "-", "-", "-", "-", "-"])
+            continue
+        r = c["roofline"]
+        ratio = c.get("useful_flops_ratio")
+        mem = c["info"].get("temp_size_in_bytes", 0) + \
+            c["info"].get("argument_size_in_bytes", 0)
+        rows.append([
+            c["arch"], c["shape"], c["mesh"], r["dominant"],
+            f"{r['t_compute_s']:.4g}", f"{r['t_memory_s']:.4g}",
+            f"{r['t_collective_s']:.4g}",
+            f"{(r['t_compute_s'] / r['t_bound_s']):.3f}" if r["t_bound_s"] else "-",
+            f"{ratio:.3f}" if ratio else "-",
+            f"{mem / GIB:.2f}",
+        ])
+    return rows
+
+
+HEADER = ["arch", "shape", "mesh", "bound", "t_comp_s", "t_mem_s",
+          "t_coll_s", "roofline_frac", "useful_flops", "mem_GiB/dev"]
+
+
+def report(dry_dir: str = "results/dryrun", out_dir: str = "results/bench",
+           tag: str = "baseline") -> str:
+    cells = load_cells(dry_dir, tag)
+    if not cells:
+        return (f"(no dry-run artifacts under {dry_dir} with tag {tag!r}; "
+                f"run: PYTHONPATH=src python -m repro.launch.dryrun)")
+    rows = rows_for(cells)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"roofline_{tag}.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(HEADER)
+        w.writerows(rows)
+    return fmt_table(rows, HEADER)

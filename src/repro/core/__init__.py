@@ -1,0 +1,45 @@
+"""PGQP-JAX core: partitioned graph query processing (Das et al., 2019).
+
+Public API:
+
+  Graph / GraphBuilder / PartitionedGraph / build_partitions
+  partition_graph / SCHEMES            — multilevel partitioner (6 schemes)
+  build_catalog / generate_plan        — cost-based planning
+  Query / DisjunctiveQuery / make_*    — query construction
+  OPATEngine / TraditionalMPEngine / MapReduceMPEngine
+  oracle.match_query                   — whole-graph ground truth
+"""
+from .catalog import Catalog, build_catalog
+from .engine import EngineConfig, make_partition_evaluator
+from .graph import (Graph, GraphBuilder, LabelVocab, PartitionArrays,
+                    PartitionedGraph, WILDCARD, build_partitions)
+from .heuristics import (ALL_HEURISTICS, MAX_SN, MIN_SN, RANDOM_SN,
+                         choose_partition, choose_top_p, rank_partitions)
+from .metrics import (RunStats, avg_load_ratio_across_schemes,
+                      avg_load_ratio_for_batch, l_ideal_for_plan,
+                      total_connected_components)
+from .opat import OPATEngine, OPATResult
+from .oracle import match_disjunctive, match_query
+from .partition import SCHEMES, PartitionScheme, partition_graph, partition_quality
+from .plan import Plan, PlanArrays, PlanStep, generate_plan
+from .query import (DisjunctiveQuery, Query, QueryEdge, QueryNode,
+                    make_path_query, make_star_query)
+from .state import BindingBatch, QueryState
+from .traditional_mp import TraditionalMPEngine, TraditionalMPResult
+
+__all__ = [
+    "Catalog", "build_catalog", "EngineConfig", "make_partition_evaluator",
+    "Graph", "GraphBuilder", "LabelVocab", "PartitionArrays",
+    "PartitionedGraph", "WILDCARD", "build_partitions",
+    "ALL_HEURISTICS", "MAX_SN", "MIN_SN", "RANDOM_SN",
+    "choose_partition", "choose_top_p", "rank_partitions",
+    "RunStats", "avg_load_ratio_across_schemes", "avg_load_ratio_for_batch",
+    "l_ideal_for_plan", "total_connected_components",
+    "OPATEngine", "OPATResult", "match_disjunctive", "match_query",
+    "SCHEMES", "PartitionScheme", "partition_graph", "partition_quality",
+    "Plan", "PlanArrays", "PlanStep", "generate_plan",
+    "DisjunctiveQuery", "Query", "QueryEdge", "QueryNode",
+    "make_path_query", "make_star_query",
+    "BindingBatch", "QueryState",
+    "TraditionalMPEngine", "TraditionalMPResult",
+]

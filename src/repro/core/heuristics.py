@@ -1,0 +1,54 @@
+"""Partition-choice heuristics (paper Sec. 5).
+
+MAX-SN  : load the eligible partition with the most start/continuation nodes
+          (greedy; the paper's best performer).
+MIN-SN  : load the eligible partition with the fewest, accumulating spanning
+          work into big-SN partitions hoping to process them once.
+RANDOM  : baseline — uniform choice among eligible partitions.
+
+Ties are resolved randomly, as in the paper.  The same functions order the
+top-p set for TraditionalMP / MapReduceMP (Sec. 8.1 line 4/13).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+MAX_SN = "max-sn"
+MIN_SN = "min-sn"
+RANDOM_SN = "random-sn"
+ALL_HEURISTICS = (MAX_SN, MIN_SN, RANDOM_SN)
+
+
+def rank_partitions(heuristic: str, eligible: Sequence[int],
+                    sni_counts: Sequence[int], rng: np.random.Generator
+                    ) -> List[int]:
+    """Return ``eligible`` ordered best-first under ``heuristic``."""
+    elig = list(eligible)
+    if not elig:
+        return []
+    if heuristic == RANDOM_SN:
+        order = list(rng.permutation(len(elig)))
+        return [elig[i] for i in order]
+    counts = np.asarray([sni_counts[p] for p in elig], dtype=np.int64)
+    tie = rng.permutation(len(elig))  # random tie-break
+    if heuristic == MAX_SN:
+        keys = list(zip(-counts, tie))
+    elif heuristic == MIN_SN:
+        keys = list(zip(counts, tie))
+    else:
+        raise ValueError(f"unknown heuristic {heuristic!r}")
+    order = sorted(range(len(elig)), key=lambda i: (int(keys[i][0]), int(keys[i][1])))
+    return [elig[i] for i in order]
+
+
+def choose_partition(heuristic: str, eligible: Sequence[int],
+                     sni_counts: Sequence[int], rng: np.random.Generator) -> int:
+    return rank_partitions(heuristic, eligible, sni_counts, rng)[0]
+
+
+def choose_top_p(heuristic: str, eligible: Sequence[int],
+                 sni_counts: Sequence[int], p: int,
+                 rng: np.random.Generator) -> List[int]:
+    return rank_partitions(heuristic, eligible, sni_counts, rng)[:p]

@@ -1,0 +1,324 @@
+"""MapReduceMP — map/reduce-style parallel query evaluation (paper Sec. 9),
+adapted to TPU as a single SPMD ``shard_map`` program.
+
+Mapping of the paper's roles onto JAX/TPU constructs (see DESIGN.md):
+
+  mapper task (one per partition)   -> one device on the "part" mesh axis,
+                                       holding its partition resident in HBM
+  one-edge expansion per iteration  -> one dense [EB, W] tile-match step
+                                       (NO within-partition closure; exactly
+                                       the paper's mapper semantics)
+  emit (dest partition id, value)   -> rows tagged with owner[frontier]
+  shuffle on partition id           -> quota-based ragged jax.lax.all_to_all
+  reducer (update SNI/IMA/FAA)      -> masked merge into device-local buffers
+  jobtracker SNI merge / stop check -> jax.lax.psum of active counts inside
+                                       a lax.while_loop
+
+The whole query runs as ONE compiled program: iterations are a
+``lax.while_loop`` whose condition is a global psum — there is no host
+round-trip between iterations, which is the beyond-paper response-time win
+(the paper's Hadoop incarnation pays a full job launch per iteration).
+
+Backpressure: rows whose destination quota is full simply stay in the local
+buffer and are re-offered next iteration — deadlock-free because delivered
+rows strictly drain and the while-loop only ends when nothing is active
+anywhere.  Overflow of the *merge* buffer sets a flag the host checks.
+
+When fewer mapper nodes than partitions are available (the paper's
+m < required(i) case), ``m_limit`` gates expansion to the top-m partitions
+per iteration, ranked on-device by the SN heuristics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import EngineConfig, _match_tile
+from .graph import PartitionedGraph, WILDCARD
+from .heuristics import MAX_SN, MIN_SN, RANDOM_SN
+from .metrics import RunStats, l_ideal_for_plan
+from .plan import Plan, PlanArrays
+from .state import apply_value_op
+
+
+@dataclasses.dataclass
+class MapReduceMPResult:
+    answers: np.ndarray
+    stats: RunStats
+    n_iterations: int
+
+
+def _heuristic_id(h: str) -> int:
+    return {MAX_SN: 0, MIN_SN: 1, RANDOM_SN: 2}[h]
+
+
+class MapReduceMPEngine:
+    """One partition per device along the ``part`` mesh axis (k == mesh size)."""
+
+    def __init__(self, pg: PartitionedGraph, mesh: Mesh,
+                 cfg: Optional[EngineConfig] = None,
+                 quota_per_dest: Optional[int] = None,
+                 m_limit: Optional[int] = None,
+                 heuristic: str = MAX_SN,
+                 max_outer_iters: int = 4096):
+        self.pg = pg
+        self.mesh = mesh
+        self.cfg = cfg or EngineConfig()
+        self.P = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        assert pg.k == self.P, (
+            f"MapReduceMP requires one partition per device (k={pg.k}, "
+            f"mesh={self.P}); repartition or resize the mesh")
+        self.axis = mesh.axis_names[0]
+        assert len(mesh.axis_names) == 1, "use a 1-D 'part' mesh"
+        self.quota = quota_per_dest or max(8, self.cfg.cap // (4 * self.P))
+        self.m_limit = m_limit if m_limit is not None else self.P
+        self.heuristic = heuristic
+        self.max_outer_iters = max_outer_iters
+        self._compiled = None
+
+        # stack partitions [P, ...] (device d holds partition d)
+        parts = pg.parts
+        self.stacked = {
+            "pid": np.arange(self.P, dtype=np.int32),
+            "n_core": np.asarray([p.n_core for p in parts], dtype=np.int32),
+            "node_gid": np.stack([p.node_gid for p in parts]),
+            "node_label": np.stack([p.node_label for p in parts]),
+            "node_value": np.stack([p.node_value for p in parts]),
+            "ell_dst": np.stack([p.ell_dst for p in parts]),
+            "ell_label": np.stack([p.ell_label for p in parts]),
+            "ell_dir": np.stack([p.ell_dir for p in parts]),
+            "ell_dlab": np.stack([p.ell_dlab for p in parts]),
+            "ell_dval": np.stack([p.ell_dval for p in parts]),
+            "ell_dgid": np.stack([p.ell_dgid for p in parts]),
+        }
+        self.g2l = pg.g2l          # [P, V]
+        self.owner = pg.owner      # [V] replicated
+
+    # -- the SPMD program ----------------------------------------------------
+
+    def _build(self, plan_pad_steps: int):
+        cfg = self.cfg
+        Np = self.pg.node_pad
+        W = self.pg.parts[0].ell_width
+        Q, S = cfg.q_pad, cfg.s_pad
+        CAP = cfg.cap
+        EB = min(cfg.expand_block, CAP + Np)
+        PP, quota = self.P, self.quota
+        FAA_CAP = cfg.cap
+        axis = self.axis
+        hid = _heuristic_id(self.heuristic)
+        m_limit = self.m_limit
+
+        def frontier_info(rows, step, valid, plan, n_steps, g2l_row, n_core):
+            s = jnp.clip(step, 0, S - 1)
+            src_slot = plan.src_slot[s]
+            fg = jnp.take_along_axis(rows, src_slot[:, None], axis=1)[:, 0]
+            fg_safe = jnp.clip(fg, 0, g2l_row.shape[0] - 1)
+            lidx = jnp.where(fg >= 0, jnp.take(g2l_row, fg_safe), -1)
+            local = (lidx >= 0) & (lidx < n_core)
+            live = valid & (step < n_steps)
+            return live & local, live & ~local, lidx, fg
+
+        def device_fn(part, g2l_row, owner, plan, n_steps, rngseed):
+            # per-device state; partition id == device index on `axis`
+            my = jax.lax.axis_index(axis)
+            n_core = part["n_core"][0]
+            node_label = part["node_label"][0]
+            node_value = part["node_value"][0]
+            node_gid = part["node_gid"][0]
+            pdict = {k: v[0] for k, v in part.items()}
+            g2l_row = g2l_row[0]
+
+            # ---- iteration-0 seeding on every partition (all mappers) ----
+            node_idx = jnp.arange(Np, dtype=jnp.int32)
+            start_ok = ((node_idx < n_core)
+                        & ((plan.start_label == WILDCARD)
+                           | (node_label == plan.start_label))
+                        & apply_value_op(plan.start_value_op, node_value,
+                                         plan.start_value))
+            col = jnp.arange(Q, dtype=jnp.int32)
+            seed_rows = jnp.where(
+                (col[None, :] == plan.start_slot) & start_ok[:, None],
+                node_gid[:, None], jnp.int32(-1))
+
+            WT = CAP + Np
+            rows = jnp.concatenate(
+                [seed_rows, jnp.full((CAP, Q), -1, jnp.int32)], axis=0)
+            step = jnp.zeros(WT, jnp.int32)
+            valid = jnp.concatenate([start_ok, jnp.zeros(CAP, bool)])
+            # single-node queries: seeds may already be complete
+            faa = jnp.full((FAA_CAP, Q), -1, jnp.int32)
+            faa_n = jnp.int32(0)
+            done0 = valid & (step >= n_steps)
+            cnt0 = jnp.cumsum(done0.astype(jnp.int32)) - 1
+            tgt0 = jnp.where(done0, cnt0, FAA_CAP)
+            faa = faa.at[tgt0].set(rows, mode="drop")
+            faa_n = jnp.minimum(done0.sum(dtype=jnp.int32), FAA_CAP)
+            valid = valid & ~done0
+
+            overflow = jnp.bool_(False)
+
+            def cond(st):
+                rows, step, valid, faa, faa_n, ovf, it = st
+                live = (valid & (step < n_steps)).sum(dtype=jnp.int32)
+                total = jax.lax.psum(live, axis)
+                return (total > 0) & (it < self.max_outer_iters)
+
+            def body(st):
+                rows, step, valid, faa, faa_n, ovf, it = st
+                act, pend, lidx, fg = frontier_info(rows, step, valid, plan,
+                                                    n_steps, g2l_row, n_core)
+
+                # -- heuristic gating when m_limit < P (paper Sec. 9.2) --
+                my_sni = act.sum(dtype=jnp.int32)
+                all_sni = jax.lax.all_gather(my_sni, axis)       # [P]
+                if m_limit < PP:
+                    if hid == 0:        # MAX-SN: most start/cont. nodes first
+                        key = -all_sni
+                    elif hid == 1:      # MIN-SN among non-empty
+                        key = jnp.where(all_sni > 0, all_sni, jnp.int32(2**30))
+                    else:               # RANDOM among non-empty
+                        r = jax.random.permutation(
+                            jax.random.fold_in(jax.random.PRNGKey(rngseed), it), PP)
+                        key = jnp.where(all_sni > 0, r.astype(jnp.int32),
+                                        jnp.int32(2**30))
+                    rank = jnp.argsort(jnp.argsort(key))          # dense ranks
+                    chosen = rank[my] < m_limit
+                else:
+                    chosen = jnp.bool_(True)
+                act = act & chosen
+
+                # -- map: ONE-edge expansion of up to EB active rows --
+                sel = jnp.argsort(~act, stable=True)[:EB]
+                m = jnp.take(act, sel)
+                rows_b = jnp.take(rows, sel, axis=0)
+                step_b = jnp.take(step, sel)
+                lidx_b = jnp.take(lidx, sel)
+                valid = valid.at[sel].set(jnp.take(valid, sel) & ~m)
+
+                ok, dg, ns, nr = _match_tile(rows_b, step_b, lidx_b, m, pdict,
+                                             plan, n_steps, cfg.use_pallas)
+                EBW = EB * W
+                ok_f = ok.reshape(EBW)
+                nr_f = nr.reshape(EBW, Q)
+                ns_f = ns.reshape(EBW)
+
+                done = ok_f & (ns_f >= n_steps)
+                cnt = jnp.cumsum(done.astype(jnp.int32)) - 1
+                tgt = jnp.where(done, faa_n + cnt, FAA_CAP)
+                faa = faa.at[tgt].set(nr_f, mode="drop")
+                new_faa_n = faa_n + done.sum(dtype=jnp.int32)
+                ovf = ovf | (new_faa_n > FAA_CAP)
+                faa_n = jnp.minimum(new_faa_n, FAA_CAP)
+
+                keep = ok_f & ~done
+                free = jnp.argsort(valid, stable=True)
+                ovf = ovf | (keep.sum(dtype=jnp.int32)
+                             > (~valid).sum(dtype=jnp.int32))
+                pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                tgt2 = jnp.where(keep & (pos < WT),
+                                 free[jnp.clip(pos, 0, WT - 1)], WT)
+                rows = rows.at[tgt2].set(nr_f, mode="drop")
+                step = step.at[tgt2].set(ns_f, mode="drop")
+                valid = valid.at[tgt2].set(True, mode="drop")
+
+                # -- shuffle: quota-based all_to_all on destination pid --
+                _, pend, _, fg = frontier_info(rows, step, valid, plan,
+                                               n_steps, g2l_row, n_core)
+                dest = jnp.take(owner, jnp.clip(fg, 0, owner.shape[0] - 1))
+                dest = jnp.where(pend, dest, PP)          # PP = "no send"
+                order = jnp.argsort(dest, stable=True)    # group rows by dest
+                sdest = jnp.take(dest, order)
+                # rank within each destination group
+                grp_start = jnp.searchsorted(sdest, jnp.arange(PP + 1,
+                                                               dtype=sdest.dtype))
+                rank_in_grp = jnp.arange(WT, dtype=jnp.int32) - grp_start[
+                    jnp.clip(sdest, 0, PP)]
+                sendable = (sdest < PP) & (rank_in_grp < quota)
+                slot = jnp.where(sendable, sdest * quota + rank_in_grp,
+                                 PP * quota)
+                send_rows = jnp.full((PP * quota, Q), -1, jnp.int32)
+                send_step = jnp.zeros(PP * quota, jnp.int32)
+                send_valid = jnp.zeros(PP * quota, bool)
+                src_idx = order
+                send_rows = send_rows.at[slot].set(jnp.take(rows, src_idx, axis=0),
+                                                   mode="drop")
+                send_step = send_step.at[slot].set(jnp.take(step, src_idx),
+                                                   mode="drop")
+                send_valid = send_valid.at[slot].set(sendable, mode="drop")
+                # invalidate sent rows locally
+                sent_src = jnp.where(sendable, src_idx, WT)
+                valid = valid.at[sent_src].set(False, mode="drop")
+
+                recv_rows = jax.lax.all_to_all(
+                    send_rows.reshape(PP, quota, Q), axis, 0, 0, tiled=False
+                ).reshape(PP * quota, Q)
+                recv_step = jax.lax.all_to_all(
+                    send_step.reshape(PP, quota), axis, 0, 0, tiled=False
+                ).reshape(PP * quota)
+                recv_valid = jax.lax.all_to_all(
+                    send_valid.reshape(PP, quota), axis, 0, 0, tiled=False
+                ).reshape(PP * quota)
+
+                # -- reduce: merge received rows into free local slots --
+                free2 = jnp.argsort(valid, stable=True)
+                ovf = ovf | (recv_valid.sum(dtype=jnp.int32)
+                             > (~valid).sum(dtype=jnp.int32))
+                pos2 = jnp.cumsum(recv_valid.astype(jnp.int32)) - 1
+                tgt3 = jnp.where(recv_valid & (pos2 < WT),
+                                 free2[jnp.clip(pos2, 0, WT - 1)], WT)
+                rows = rows.at[tgt3].set(recv_rows, mode="drop")
+                step = step.at[tgt3].set(recv_step, mode="drop")
+                valid = valid.at[tgt3].set(True, mode="drop")
+
+                return rows, step, valid, faa, faa_n, ovf, it + 1
+
+            st = (rows, step, valid, faa, faa_n, overflow, jnp.int32(0))
+            rows, step, valid, faa, faa_n, overflow, iters = \
+                jax.lax.while_loop(cond, body, st)
+            return (faa[None], faa_n[None], overflow[None], iters[None])
+
+        pspec = P(axis)
+        in_specs = (
+            {k: pspec for k in self.stacked},   # partitions sharded by device
+            pspec,                              # g2l rows
+            P(),                                # owner replicated
+            P(),                                # plan replicated
+            P(),                                # n_steps
+            P(),                                # rng seed
+        )
+        out_specs = (pspec, pspec, pspec, pspec)
+        fn = jax.shard_map(device_fn, mesh=self.mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(fn)
+
+    def run(self, plan: Plan, seed: int = 0) -> MapReduceMPResult:
+        cfg = self.cfg
+        assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
+        if self._compiled is None:
+            self._compiled = self._build(cfg.s_pad)
+        plan_arrays = PlanArrays.from_plan(plan, pad_steps=cfg.s_pad)
+        faa, faa_n, overflow, iters = self._compiled(
+            self.stacked, self.g2l, self.owner, plan_arrays,
+            np.int32(plan.n_steps), np.int32(seed))
+        faa = np.asarray(faa)
+        faa_n = np.asarray(faa_n)
+        if bool(np.asarray(overflow).any()):
+            raise RuntimeError("MapReduceMP buffer overflow; raise cap/quota")
+        rows = [faa[p, : faa_n[p]] for p in range(self.P) if faa_n[p]]
+        answers = (np.unique(np.concatenate(rows), axis=0) if rows
+                   else np.zeros((0, cfg.q_pad), dtype=np.int32))
+        n_iter = int(np.asarray(iters).max())
+        stats = RunStats(query=plan.query.name, scheme="?",
+                         heuristic=self.heuristic,
+                         loads=[], l_ideal=l_ideal_for_plan(self.pg, plan),
+                         n_answers=int(answers.shape[0]),
+                         iterations=n_iter)
+        return MapReduceMPResult(answers=answers, stats=stats,
+                                 n_iterations=n_iter)

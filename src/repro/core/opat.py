@@ -1,0 +1,126 @@
+"""OPAT — One Partition At a Time query evaluation (paper Sec. 5-7).
+
+The host orchestrator mirrors the paper's PGQP loop exactly:
+
+  1. build the initial SNI from start-label counts per partition,
+  2. choose the next partition with the configured heuristic,
+  3. run the jitted within-partition evaluator (= "load" the partition),
+  4. route outgoing continuations into destination IMA files, append
+     completed answers to the FAA, update the SNI,
+  5. repeat until no partition is eligible.
+
+Partition *loads* (including re-loads of the same partition, Fig. 4c) are
+recorded for the load-ratio metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
+from .graph import PartitionedGraph
+from .heuristics import choose_partition
+from .metrics import RunStats, l_ideal_for_plan
+from .plan import Plan, PlanArrays
+from .state import BindingBatch, QueryState
+
+
+@dataclasses.dataclass
+class OPATResult:
+    answers: np.ndarray          # [n, q_pad] global-vertex-id rows
+    stats: RunStats
+    state: QueryState
+
+
+class OPATEngine:
+    """Reusable engine bound to one partitioned graph (one compile)."""
+
+    def __init__(self, pg: PartitionedGraph, cfg: Optional[EngineConfig] = None):
+        self.pg = pg
+        self.cfg = cfg or EngineConfig()
+        assert pg.node_pad > 0, "build_partitions(uniform_pad=True) required"
+        w = pg.parts[0].ell_width
+        assert all(p.ell_width == w for p in pg.parts), "uniform ELL width required"
+        self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
+        self._parts = [part_to_device_dict(p) for p in pg.parts]
+
+    def _run_partition(self, pid: int, plan_arrays: PlanArrays,
+                       n_steps: int, batch: BindingBatch, seed_fresh: bool,
+                       st: QueryState) -> None:
+        cfg = self.cfg
+        chunks: List[BindingBatch] = []
+        if batch.n == 0:
+            chunks.append(BindingBatch.empty(cfg.q_pad))
+        else:
+            for i in range(0, batch.n, cfg.cap):
+                chunks.append(BindingBatch(rows=batch.rows[i : i + cfg.cap],
+                                           step=batch.step[i : i + cfg.cap]))
+        for ci, chunk in enumerate(chunks):
+            in_rows = np.full((cfg.cap, cfg.q_pad), -1, dtype=np.int32)
+            in_step = np.zeros(cfg.cap, dtype=np.int32)
+            in_valid = np.zeros(cfg.cap, dtype=bool)
+            if chunk.n:
+                in_rows[: chunk.n] = chunk.rows
+                in_step[: chunk.n] = chunk.step
+                in_valid[: chunk.n] = True
+            res = self._eval(self._parts[pid], self.pg.g2l[pid], self.pg.owner,
+                             plan_arrays, np.int32(n_steps),
+                             in_rows, in_step, in_valid,
+                             np.bool_(seed_fresh and ci == 0))
+            if bool(res.overflow):
+                raise RuntimeError(
+                    f"evaluator buffer overflow on partition {pid}; raise "
+                    f"EngineConfig.cap (currently {cfg.cap})")
+            cn = int(res.comp_n)
+            if cn:
+                st.faa_rows.append(np.asarray(res.comp_rows)[:cn])
+            on = int(res.out_n)
+            if on:
+                out_rows = np.asarray(res.out_rows)[:on]
+                out_step = np.asarray(res.out_step)[:on]
+                out_dest = np.asarray(res.out_dest)[:on]
+                for q in range(self.pg.k):
+                    sel = out_dest == q
+                    if sel.any():
+                        st.ima[q] = st.ima[q].concat(
+                            BindingBatch(rows=out_rows[sel], step=out_step[sel])
+                        ).dedup()
+
+    def run(self, plan: Plan, heuristic: str, seed: int = 0,
+            max_loads: Optional[int] = None) -> OPATResult:
+        cfg = self.cfg
+        assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
+        rng = np.random.default_rng(seed)
+        plan_arrays = PlanArrays.from_plan(plan, pad_steps=cfg.s_pad)
+        counts = self.pg.start_label_counts(plan.start_label,
+                                            plan.start_value_op,
+                                            plan.start_value)
+        st = QueryState.initial(self.pg.k, cfg.q_pad, counts)
+        limit = max_loads if max_loads is not None else 64 * self.pg.k
+
+        while True:
+            eligible = st.eligible()
+            if not eligible:
+                break
+            if len(st.loads) >= limit:
+                raise RuntimeError("OPAT exceeded max partition loads "
+                                   f"({limit}); likely a routing bug")
+            sni = {p: st.sni_count(p) for p in eligible}
+            pid = choose_partition(heuristic, eligible, sni, rng)
+            st.loads.append(pid)
+            st.iterations += 1
+            batch = st.ima[pid]
+            st.ima[pid] = BindingBatch.empty(cfg.q_pad)
+            seed_fresh = bool(st.fresh_pending[pid])
+            st.fresh_pending[pid] = False
+            self._run_partition(pid, plan_arrays, plan.n_steps, batch,
+                                seed_fresh, st)
+
+        stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
+                         loads=list(st.loads),
+                         l_ideal=l_ideal_for_plan(self.pg, plan),
+                         n_answers=int(st.unique_answers().shape[0]),
+                         iterations=st.iterations)
+        return OPATResult(answers=st.unique_answers(), stats=stats, state=st)

@@ -1,0 +1,148 @@
+"""TraditionalMP — parallel partition processing with p processors
+(paper Sec. 8, Algorithm 1).
+
+Identical bookkeeping to OPAT; the difference is the *set* of partitions
+chosen per iteration (top-p under the heuristic) and their parallel
+execution.  On real hardware each chosen partition maps to one device; here
+the chosen partitions are evaluated with ``jax.vmap`` over stacked partition
+arrays — the same compiled program OPAT uses, batched — which is exactly the
+semantics of p identical processors executing PGQP independently
+(Algorithm 1 lines 6-8).  IMA merging order does not matter (line 9), so the
+host merge loop is order-insensitive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
+from .graph import PartitionedGraph
+from .heuristics import choose_top_p
+from .metrics import RunStats, l_ideal_for_plan
+from .plan import Plan, PlanArrays
+from .state import BindingBatch, QueryState
+
+
+@dataclasses.dataclass
+class TraditionalMPResult:
+    answers: np.ndarray
+    stats: RunStats
+    state: QueryState
+    partitions_per_iteration: List[List[int]]
+
+
+class TraditionalMPEngine:
+    def __init__(self, pg: PartitionedGraph, n_processors: int,
+                 cfg: Optional[EngineConfig] = None):
+        assert n_processors >= 1
+        self.pg = pg
+        self.p = n_processors
+        self.cfg = cfg or EngineConfig()
+        w = pg.parts[0].ell_width
+        self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
+        # vmapped over (partition arrays, g2l row, inputs); plan broadcast
+        self._veval = jax.jit(jax.vmap(
+            self._eval, in_axes=(0, 0, None, None, None, 0, 0, 0, 0)))
+        self._parts = [part_to_device_dict(p_) for p_ in pg.parts]
+
+    def _stack(self, pids: List[int]) -> Dict[str, np.ndarray]:
+        keys = self._parts[0].keys()
+        return {k: np.stack([self._parts[p][k] for p in pids]) for k in keys}
+
+    def run(self, plan: Plan, heuristic: str, seed: int = 0,
+            max_iterations: Optional[int] = None) -> TraditionalMPResult:
+        cfg = self.cfg
+        assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
+        rng = np.random.default_rng(seed)
+        plan_arrays = PlanArrays.from_plan(plan, pad_steps=cfg.s_pad)
+        counts = self.pg.start_label_counts(plan.start_label,
+                                            plan.start_value_op,
+                                            plan.start_value)
+        st = QueryState.initial(self.pg.k, cfg.q_pad, counts)
+        limit = max_iterations if max_iterations is not None else 64 * self.pg.k
+        per_iter: List[List[int]] = []
+
+        while True:
+            eligible = st.eligible()
+            if not eligible:
+                break
+            if st.iterations >= limit:
+                raise RuntimeError("TraditionalMP exceeded max iterations")
+            sni = {p: st.sni_count(p) for p in eligible}
+            chosen = choose_top_p(heuristic, eligible, sni, self.p, rng)
+            per_iter.append(list(chosen))
+            st.iterations += 1
+
+            # pad the chosen set to exactly p so the vmapped evaluator keeps a
+            # single compiled shape (padding entries are no-ops: empty input,
+            # no fresh seeding) — idle processors in the paper's terms.
+            exec_set = list(chosen) + [chosen[0]] * (self.p - len(chosen))
+            batches: List[BindingBatch] = []
+            seeds: List[bool] = []
+            is_real: List[bool] = [True] * len(chosen) + [False] * (self.p - len(chosen))
+            for pid in chosen:
+                st.loads.append(pid)
+                b = st.ima[pid]
+                st.ima[pid] = BindingBatch.empty(cfg.q_pad)
+                if b.n > cfg.cap:
+                    # keep the tail for a later iteration of the same partition
+                    st.ima[pid] = BindingBatch(rows=b.rows[cfg.cap:],
+                                               step=b.step[cfg.cap:])
+                    b = BindingBatch(rows=b.rows[: cfg.cap],
+                                     step=b.step[: cfg.cap])
+                batches.append(b)
+                seeds.append(bool(st.fresh_pending[pid]))
+                st.fresh_pending[pid] = False
+            while len(batches) < self.p:
+                batches.append(BindingBatch.empty(cfg.q_pad))
+                seeds.append(False)
+
+            n = self.p
+            in_rows = np.full((n, cfg.cap, cfg.q_pad), -1, dtype=np.int32)
+            in_step = np.zeros((n, cfg.cap), dtype=np.int32)
+            in_valid = np.zeros((n, cfg.cap), dtype=bool)
+            for i, b in enumerate(batches):
+                if b.n:
+                    in_rows[i, : b.n] = b.rows
+                    in_step[i, : b.n] = b.step
+                    in_valid[i, : b.n] = True
+
+            res = self._veval(self._stack(exec_set),
+                              self.pg.g2l[np.asarray(exec_set)], self.pg.owner,
+                              plan_arrays, np.int32(plan.n_steps),
+                              in_rows, in_step, in_valid,
+                              np.asarray(seeds, dtype=bool))
+            if bool(np.any(np.asarray(res.overflow))):
+                raise RuntimeError("evaluator buffer overflow; raise cap")
+            comp_rows = np.asarray(res.comp_rows)
+            comp_n = np.asarray(res.comp_n)
+            out_rows = np.asarray(res.out_rows)
+            out_step = np.asarray(res.out_step)
+            out_dest = np.asarray(res.out_dest)
+            out_n = np.asarray(res.out_n)
+            for i in range(n):  # merge IMA_i -> FAA/IMA (order-insensitive)
+                if not is_real[i]:
+                    continue
+                if comp_n[i]:
+                    st.faa_rows.append(comp_rows[i, : comp_n[i]])
+                if out_n[i]:
+                    orow = out_rows[i, : out_n[i]]
+                    ostp = out_step[i, : out_n[i]]
+                    odst = out_dest[i, : out_n[i]]
+                    for q in range(self.pg.k):
+                        sel = odst == q
+                        if sel.any():
+                            st.ima[q] = st.ima[q].concat(
+                                BindingBatch(rows=orow[sel], step=ostp[sel])
+                            ).dedup()
+
+        stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
+                         loads=list(st.loads),
+                         l_ideal=l_ideal_for_plan(self.pg, plan),
+                         n_answers=int(st.unique_answers().shape[0]),
+                         iterations=st.iterations)
+        return TraditionalMPResult(answers=st.unique_answers(), stats=stats,
+                                   state=st, partitions_per_iteration=per_iter)

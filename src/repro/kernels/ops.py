@@ -1,0 +1,103 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper:
+  * adapts engine-level arguments to the kernel's packed layout,
+  * pads the lane dimension to 128 multiples (TPU tile alignment),
+  * selects interpret mode automatically off-TPU (the kernels TARGET TPU;
+    interpret=True executes the kernel body in Python on CPU so correctness
+    is validated everywhere),
+  * has a pure-jnp twin in ref.py used by the tests as the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .frontier_expand import (N_PINT, _P_ACTIVE, _P_CLOSES, _P_DIR, _P_DLAB,
+                              _P_DOP, _P_DST, _P_EL, _P_STEP,
+                              frontier_expand_pallas)
+from .label_histogram import label_histogram_pallas
+
+LANE = 128
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def frontier_expand(rows_b, step_b, lidx_b, m,
+                    ell_dst, ell_label, ell_dir,
+                    ell_dlab, ell_dval, ell_dgid,
+                    plan, n_steps, *, interpret=None):
+    """Engine-facing adapter with the same signature/semantics as the jnp
+    match in engine._match_tile_jnp (minus row construction).
+
+    Returns (ok [EB, W] bool, dg [EB, W] int32) for the ORIGINAL width W.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    EB = rows_b.shape[0]
+    Np, W = ell_dst.shape
+    S = plan.src_slot.shape[0]
+
+    s = jnp.clip(step_b, 0, S - 1)
+    active = (m & (step_b < n_steps)).astype(jnp.int32)
+    pint = jnp.zeros((EB, N_PINT), jnp.int32)
+    pint = pint.at[:, _P_EL].set(plan.edge_label[s])
+    pint = pint.at[:, _P_DIR].set(plan.direction[s])
+    pint = pint.at[:, _P_DLAB].set(plan.dst_label[s])
+    pint = pint.at[:, _P_DOP].set(plan.dst_value_op[s])
+    pint = pint.at[:, _P_DST].set(plan.dst_slot[s])
+    pint = pint.at[:, _P_CLOSES].set(plan.closes_cycle[s])
+    pint = pint.at[:, _P_STEP].set(step_b)
+    pint = pint.at[:, _P_ACTIVE].set(active)
+    pflt = plan.dst_value[s].astype(jnp.float32)
+    lidx = jnp.clip(lidx_b, 0, Np - 1).astype(jnp.int32)
+
+    # pad the lane dim to 128 (padding edges: dst -1 -> never match)
+    Wp = _round_up(W, LANE)
+    if Wp != W:
+        padw = [(0, 0), (0, Wp - W)]
+        ell_dst = jnp.pad(ell_dst, padw, constant_values=-1)
+        ell_label = jnp.pad(ell_label, padw, constant_values=-2)
+        ell_dir = jnp.pad(ell_dir, padw)
+        ell_dlab = jnp.pad(ell_dlab, padw, constant_values=-2)
+        ell_dval = jnp.pad(ell_dval, padw, constant_values=jnp.nan)
+        ell_dgid = jnp.pad(ell_dgid, padw, constant_values=-1)
+
+    ok, dg = frontier_expand_pallas(
+        lidx, pint, pflt, rows_b.astype(jnp.int32),
+        ell_dst, ell_label, ell_dir, ell_dlab, ell_dval, ell_dgid,
+        interpret=interpret)
+    return ok[:, :W].astype(bool), dg[:, :W]
+
+
+def frontier_expand_ref(rows_b, step_b, lidx_b, m,
+                        ell_dst, ell_label, ell_dir,
+                        ell_dlab, ell_dval, ell_dgid,
+                        plan, n_steps):
+    """jnp oracle with the identical adapter signature (tests diff the two)."""
+    S = plan.src_slot.shape[0]
+    s = jnp.clip(step_b, 0, S - 1)
+    return ref.frontier_expand_ref(
+        rows_b, step_b, lidx_b, m,
+        ell_dst, ell_label, ell_dir, ell_dlab, ell_dval, ell_dgid,
+        plan.edge_label[s], plan.direction[s], plan.dst_label[s],
+        plan.dst_value_op[s], plan.dst_value[s], plan.dst_slot[s],
+        plan.closes_cycle[s], n_steps)
+
+
+def label_histogram(node_label, node_value, core_mask, label, value_op, value,
+                    *, interpret=None):
+    if interpret is None:
+        interpret = not on_tpu()
+    return label_histogram_pallas(node_label, node_value, core_mask,
+                                  label, value_op, value, interpret=interpret)

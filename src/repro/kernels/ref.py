@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function here defines the exact semantics its kernel twin must match;
+tests sweep shapes/dtypes and assert allclose/array_equal against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import DIR_BACKWARD, DIR_FORWARD, DIR_UNDIRECTED, WILDCARD
+from ..core.query import (OP_EQ, OP_GE, OP_GT, OP_LE, OP_LT, OP_NE, OP_NONE,
+                          QDIR_ANY, QDIR_IN, QDIR_OUT)
+
+
+def value_pred(op, values, v):
+    """Branchless value-predicate evaluation on arrays (NaN fails all ops)."""
+    finite = values == values
+    res = (
+        ((op == OP_EQ) & (values == v))
+        | ((op == OP_NE) & (values != v))
+        | ((op == OP_LT) & (values < v))
+        | ((op == OP_LE) & (values <= v))
+        | ((op == OP_GT) & (values > v))
+        | ((op == OP_GE) & (values >= v))
+    )
+    return (op == OP_NONE) | (finite & res)
+
+
+def frontier_expand_ref(rows_b, step_b, lidx_b, m,
+                        ell_dst, ell_label, ell_dir,
+                        ell_dlab, ell_dval, ell_dgid,
+                        p_el, p_dir, p_dlab, p_dop, p_dval, p_dst, p_closes,
+                        n_steps):
+    """One-edge expansion match over an [EB, W] candidate tile.
+
+    Args (EB bindings, W = ELL width, Q = binding row width):
+      rows_b   [EB, Q] int32  — current bindings (global vertex ids, -1 unbound)
+      step_b   [EB]    int32  — next plan step per row
+      lidx_b   [EB]    int32  — local index of the frontier vertex
+      m        [EB]    bool   — row-active mask
+      ell_*    [Np, W]        — ELLPACK adjacency + denormalized dst attrs
+      p_*      [EB]           — per-row plan-step parameters (pre-gathered)
+      n_steps  scalar int32
+
+    Returns: ok [EB, W] bool match mask, dg [EB, W] int32 dst global ids.
+    """
+    lsafe = jnp.clip(lidx_b, 0, ell_dst.shape[0] - 1)
+    ed = jnp.take(ell_dst, lsafe, axis=0)
+    el = jnp.take(ell_label, lsafe, axis=0)
+    edir = jnp.take(ell_dir, lsafe, axis=0)
+    dl = jnp.take(ell_dlab, lsafe, axis=0)
+    dv = jnp.take(ell_dval, lsafe, axis=0)
+    dg = jnp.take(ell_dgid, lsafe, axis=0)
+
+    edge_exists = ed >= 0
+    elabel_ok = (p_el[:, None] == WILDCARD) | (el == p_el[:, None])
+    dir_ok = ((p_dir[:, None] == QDIR_ANY)
+              | (edir == DIR_UNDIRECTED)
+              | ((p_dir[:, None] == QDIR_OUT) & (edir == DIR_FORWARD))
+              | ((p_dir[:, None] == QDIR_IN) & (edir == DIR_BACKWARD)))
+    dlabel_ok = (p_dlab[:, None] == WILDCARD) | (dl == p_dlab[:, None])
+    dval_ok = value_pred(p_dop[:, None], dv, p_dval[:, None])
+    inj_ok = ~jnp.any(rows_b[:, None, :] == dg[:, :, None], axis=-1)
+    bound_dst = jnp.take_along_axis(rows_b, p_dst[:, None], axis=1)
+    cyc_ok = (p_closes[:, None] == 1) & (bound_dst == dg)
+    new_ok = (p_closes[:, None] == 0) & dlabel_ok & dval_ok & inj_ok
+    ok = (m[:, None] & (step_b[:, None] < n_steps)
+          & edge_exists & elabel_ok & dir_ok & (cyc_ok | new_ok))
+    return ok, dg
+
+
+def label_histogram_ref(node_label, node_value, n_core_mask,
+                        label, value_op, value):
+    """#nodes matching (label, value predicate) among core nodes.
+
+    node_label [Np] int32, node_value [Np] f32, n_core_mask [Np] bool.
+    Returns scalar int32 count.
+    """
+    ok = n_core_mask & ((label == WILDCARD) | (node_label == label))
+    ok = ok & value_pred(value_op, node_value, value)
+    return ok.sum(dtype=jnp.int32)
+
+
+def masked_count_ref(mask):
+    """Total number of set bits, int32 (used for SNI metric updates)."""
+    return mask.sum(dtype=jnp.int32)

@@ -1,0 +1,8 @@
+from .mesh import make_production_mesh, dp_axes
+from .sharding import (ShardingRules, param_shardings, opt_shardings,
+                       batch_shardings, cache_shardings, act_constraint,
+                       logit_constraint)
+
+__all__ = ["make_production_mesh", "dp_axes", "ShardingRules",
+           "param_shardings", "opt_shardings", "batch_shardings",
+           "cache_shardings", "act_constraint", "logit_constraint"]

@@ -1,0 +1,432 @@
+"""Static cost analyzer over optimized (partitioned) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits every
+instruction ONCE — ``while`` bodies (= every ``lax.scan``: our layer stacks,
+recurrent cells, flash-attention chunk loops) are not multiplied by their
+trip counts, undercounting FLOPs/bytes/collectives by orders of magnitude
+for deep or recurrent models.  This analyzer parses the optimized HLO,
+computes per-computation costs bottom-up, and multiplies while-body costs by
+the trip count recovered from the loop condition's compare-against-constant.
+
+Three cost streams, all PER DEVICE (partitioned shapes are shard shapes):
+
+flops      dot = 2*numel(result)*K (K = product of lhs contracting dims,
+           operand shapes resolved through a per-computation symbol table);
+           elementwise = numel(result); reduce = numel(operand).
+
+bytes_min  the roofline memory term: MINIMUM HBM traffic under perfect
+           operator fusion/tiling on the TPU target.  Data is charged only
+           when it must cross HBM:
+             * operands whose ORIGIN is off-chip — parameters, constants,
+               loop carries (get-tuple-element), anything passing through a
+               view op from those — are charged at each consumer;
+             * each computation ROOT is charged as a write (while-body
+               roots = the carry write per iteration), EXCEPT tuple
+               elements passed through unchanged (loop invariants, e.g.
+               scanned weight stacks, are buffer-aliased by XLA);
+             * dynamic-update-slice charges only the update (in-place);
+               gather/dynamic-slice charge the result (the rows actually
+               read); copies charge operand+result; collectives charge
+               wire traffic.
+           Everything produced AND consumed on-chip (e.g. the flash-
+           attention probability tile between its two dots) is free — a
+           perfectly-fused kernel keeps it in VMEM.
+
+bytes_xla  the XLA HloCostAnalysis convention (operands+results of every
+           op, fusion-internal ops free) — pessimistic on CPU where fusion
+           is conservative; kept as a diagnostic upper band.
+
+collectives: ring accounting — all-gather: result; all-reduce: 2x operand;
+reduce-scatter / all-to-all / collective-permute: operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|token)"
+    r"\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "cosine", "sine",
+    "logistic", "atan2", "remainder", "compare", "select", "and", "or",
+    "xor", "not", "clamp", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "popcnt", "clz", "erf", "tan",
+}
+_ZERO_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+# view-ish ops: propagate data origin, charge nothing themselves
+_VIEW_OPS = {"bitcast", "reshape", "broadcast", "convert", "transpose",
+             "get-tuple-element", "tuple"}
+_OFFCHIP_OPS = {"parameter", "constant", "rng-bit-generator", "infeed"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> float:
+    return float(sum(_numel(d) * _DTYPE_BYTES.get(t, 4) for t, d in shapes))
+
+
+def _shapes_numel(shapes: List[Tuple[str, str]]) -> int:
+    return sum(_numel(d) for _, d in shapes)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_min: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_ops: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.bytes_min += mult * other.bytes_min
+        for k in _COLLECTIVES:
+            self.coll[k] += mult * other.coll[k]
+        self.coll_ops += mult * other.coll_ops
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr]
+    symbols: Dict[str, "_Instr"]
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        if cur is None:
+            h = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", line)
+            if h and "->" in line:
+                cur = _Comp(h.group(2), [], {})
+                comps[cur.name] = cur
+                if h.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        is_root, name, rhs = bool(m.group(1)), m.group(2), m.group(3)
+        om = _OPCODE_RE.search(" " + rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        head = rhs[: rhs.find(opcode + "(")]
+        after = rhs[rhs.find(opcode + "(") + len(opcode) + 1:]
+        operand_str = after[: after.find(")")] if ")" in after else after
+        ins = _Instr(name=name, opcode=opcode,
+                     result_shapes=_SHAPE_RE.findall(head),
+                     operand_names=_OPERAND_RE.findall(operand_str),
+                     line=rhs, is_root=is_root)
+        cur.instrs.append(ins)
+        cur.symbols[name] = ins
+    return comps, entry
+
+
+def _trip_count(cond: _Comp) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_RE.findall(ins.line):
+            best = max(best, int(c))
+    return best
+
+
+class HloCostModel:
+    VMEM_NOTE = "bytes_min assumes perfect fusion/tiling (see module doc)"
+
+    def __init__(self, text: str):
+        self.comps, self.entry = _parse(text)
+        self._memo: Dict[str, Cost] = {}
+        self._origin_memo: Dict[Tuple[str, str], bool] = {}
+        self.warnings: List[str] = []
+        self.contributors: List[Tuple[float, str, str]] = []
+
+    # ------------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        name = comp or self.entry
+        if name is None:
+            self.warnings.append("no ENTRY computation found")
+            total = Cost()
+            for n in self.comps:
+                total.add(self._comp_cost(n, 1.0))
+            return total
+        return self._comp_cost(name, 1.0)
+
+    def _comp_cost(self, name: str, mult: float) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is not None:
+            for ins in comp.instrs:
+                total.add(self._instr_cost(comp, ins, mult))
+        self._memo[name] = total
+        return total
+
+    # -- data origin -----------------------------------------------------
+    def _offchip(self, comp: _Comp, name: str, depth: int = 0) -> bool:
+        key = (comp.name, name)
+        if key in self._origin_memo:
+            return self._origin_memo[key]
+        self._origin_memo[key] = False  # cycle guard
+        ins = comp.symbols.get(name)
+        if ins is None or depth > 64:
+            out = True   # unknown name: be conservative (charge it)
+        elif ins.opcode in _OFFCHIP_OPS or ins.opcode == "get-tuple-element":
+            out = True
+        elif ins.opcode in _VIEW_OPS:
+            out = any(self._offchip(comp, o, depth + 1)
+                      for o in ins.operand_names[:1]) if ins.operand_names \
+                else False
+        elif ins.opcode in ("copy", "copy-start", "copy-done"):
+            out = True   # copies materialize
+        else:
+            out = False
+        self._origin_memo[key] = out
+        return out
+
+    def _op_shapes(self, comp: _Comp, ins: _Instr) -> List[List[Tuple[str, str]]]:
+        out = []
+        for nm in ins.operand_names:
+            src = comp.symbols.get(nm)
+            out.append(src.result_shapes if src else [])
+        if not out:   # old printing: shapes inline in the operand list
+            after = ins.line[ins.line.find(ins.opcode + "(") + len(ins.opcode) + 1:]
+            inline = _SHAPE_RE.findall(after[: after.find(")")])
+            out = [[s] for s in inline]
+        return out
+
+    def _operand_bytes_offchip(self, comp: _Comp, ins: _Instr) -> float:
+        total = 0.0
+        for nm, shapes in zip(ins.operand_names, self._op_shapes(comp, ins)):
+            if self._offchip(comp, nm):
+                total += _shapes_bytes(shapes)
+        return total
+
+    # -- per instruction ---------------------------------------------------
+    def _instr_cost(self, comp: _Comp, ins: _Instr, mult: float) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        out_elems = _shapes_numel(ins.result_shapes)
+        res_bytes = _shapes_bytes(ins.result_shapes)
+        op_shapes = self._op_shapes(comp, ins)
+        all_op_bytes = sum(_shapes_bytes(s) for s in op_shapes)
+
+        if op == "while":
+            body = _BODY_RE.search(ins.line)
+            cond = _COND_RE.search(ins.line)
+            trips = 1
+            if cond and cond.group(1) in self.comps:
+                trips = _trip_count(self.comps[cond.group(1)])
+                c.add(self._comp_cost(cond.group(1), mult * trips), trips)
+            if body and body.group(1) in self.comps:
+                c.add(self._comp_cost(body.group(1), mult * trips), trips)
+            return c
+
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.line)
+            if m and m.group(1) in self.comps:
+                inner = self._comp_cost(m.group(1), mult)
+                c.flops += inner.flops
+                c.bytes_min += inner.bytes_min
+                for k in _COLLECTIVES:
+                    c.coll[k] += inner.coll[k]
+                c.coll_ops += inner.coll_ops
+            c.bytes += res_bytes + all_op_bytes
+            # fusion boundary traffic under the min model: off-chip operands
+            c.bytes_min += self._operand_bytes_offchip(comp, ins)
+            if ins.is_root:
+                c.bytes_min += res_bytes
+            self._note(c.bytes_min * mult, ins)
+            return c
+
+        if op in ("call", "custom-call", "async-start"):
+            m = _CALLS_RE.search(ins.line) or _TOAPPLY_RE.search(ins.line)
+            if m and m.group(1) in self.comps:
+                c.add(self._comp_cost(m.group(1), mult))
+            c.bytes += res_bytes + all_op_bytes
+            if op == "custom-call":
+                c.bytes_min += res_bytes + all_op_bytes
+            self._note(c.bytes_min * mult, ins)
+            return c
+
+        if op == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+            names = re.findall(r"%?([\w.\-]+)", m.group(1)) if m else []
+            for branch in names:
+                if branch in self.comps:
+                    c.add(self._comp_cost(branch, mult))
+            c.bytes += res_bytes + all_op_bytes
+            return c
+
+        is_coll = None
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                is_coll = k
+                break
+        if is_coll:
+            opn = all_op_bytes or res_bytes
+            # CPU-backend artifact: XLA float-normalization promotes bf16
+            # collectives to f32 (operand arrives via a convert).  TPU runs
+            # them natively in bf16, so charge at the pre-convert width.
+            scale = 1.0
+            for nm in ins.operand_names:
+                src = comp.symbols.get(nm)
+                if src is not None and ("convert" in src.opcode
+                                        or "convert" in src.name):
+                    scale = 0.5
+                    break
+            if is_coll == "all-gather":
+                c.coll[is_coll] += res_bytes * scale
+            elif is_coll == "all-reduce":
+                c.coll[is_coll] += 2 * opn * scale
+            else:
+                c.coll[is_coll] += opn * scale
+            c.coll_ops += 1
+            c.bytes += res_bytes + opn
+            c.bytes_min += (res_bytes + opn) * scale
+            self._note(c.bytes_min * mult, ins)
+            return c
+
+        if op.endswith("-done") or op.endswith("-update") or op in _ZERO_OPS:
+            # ROOT tuple of a while body = the carry write; charge only
+            # elements that changed (pass-through gte = loop invariant)
+            if op == "tuple" and ins.is_root:
+                for nm, shapes in zip(ins.operand_names, op_shapes):
+                    src = comp.symbols.get(nm)
+                    if src is not None and src.opcode in (
+                            "get-tuple-element", "parameter",
+                            # in-place / already charged at the producer:
+                            "dynamic-update-slice", "copy", "bitcast"):
+                        continue
+                    c.bytes_min += _shapes_bytes(shapes)
+                self._note(c.bytes_min * mult, ins)
+            return c
+
+        # ---- flops ----
+        if op == "dot":
+            k = 1
+            m = _LHS_CDIMS_RE.search(ins.line)
+            lhs = op_shapes[0] if op_shapes else []
+            if m and lhs:
+                dims = lhs[0][1]
+                sizes = [int(x) for x in dims.split(",")] if dims else []
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(sizes):
+                        k *= sizes[idx]
+            c.flops += 2.0 * out_elems * k
+        elif op == "convolution":
+            kern = _shapes_numel(op_shapes[1]) if len(op_shapes) > 1 else 1
+            c.flops += 2.0 * out_elems * kern
+        elif op in _ELEMENTWISE:
+            c.flops += out_elems
+        elif op in ("reduce", "reduce-window"):
+            c.flops += _shapes_numel(op_shapes[0]) if op_shapes else out_elems
+
+        # ---- bytes (XLA convention) ----
+        c.bytes += res_bytes + all_op_bytes
+
+        # ---- bytes_min (perfect-fusion floor) ----
+        if op == "dynamic-update-slice":
+            # in-place update: charge the update slice only
+            if len(op_shapes) > 1:
+                c.bytes_min += _shapes_bytes(op_shapes[1])
+        elif op in ("gather", "dynamic-slice", "slice"):
+            c.bytes_min += res_bytes          # the rows actually read
+        elif op in ("copy", "copy-start"):
+            c.bytes_min += res_bytes + all_op_bytes
+        elif op in ("scatter",):
+            upd = _shapes_bytes(op_shapes[2]) if len(op_shapes) > 2 else res_bytes
+            c.bytes_min += upd
+        else:
+            c.bytes_min += self._operand_bytes_offchip(comp, ins)
+        if ins.is_root and op != "tuple":
+            c.bytes_min += res_bytes          # escapes the computation
+        self._note(c.bytes_min * mult, ins)
+        return c
+
+    def _note(self, weighted_bytes: float, ins: _Instr) -> None:
+        if weighted_bytes > 0:
+            self.contributors.append((weighted_bytes, ins.opcode,
+                                      ins.line[:160]))
+
+    def top_contributors(self, k: int = 20) -> List[Tuple[float, str, str]]:
+        return sorted(self.contributors, reverse=True)[:k]
+
+
+def analyze_hlo_text(text: str) -> Dict[str, object]:
+    model = HloCostModel(text)
+    c = model.cost()
+    out: Dict[str, object] = {
+        "flops": c.flops,
+        "bytes": c.bytes_min,            # roofline memory term
+        "bytes_xla_convention": c.bytes,  # diagnostic upper band
+        "collective_bytes": dict(c.coll),
+        "collective_bytes_total": c.coll_total,
+        "collective_op_executions": c.coll_ops,
+    }
+    if model.warnings:
+        out["warnings"] = model.warnings
+    return out
+
+
+def top_contributors(text: str, k: int = 20) -> List[Tuple[float, str, str]]:
+    model = HloCostModel(text)
+    model.cost()
+    return model.top_contributors(k)

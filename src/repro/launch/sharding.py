@@ -1,0 +1,258 @@
+"""Divisibility-aware sharding rule resolver.
+
+Parameter leaf NAMES carry sharding meaning: ``AXES_BY_NAME`` maps each leaf
+name to per-dim logical axes, and ``LOGICAL_TO_MESH`` maps logical axes to
+candidate mesh axes.  The resolver assigns a mesh axis to a dim only when
+the axis size divides the dim and the axis is not already used in that spec
+— so e.g. qwen2-1.5b's 12 heads silently fall back to replication over the
+16-wide model axis while its ff/vocab dims still shard (DESIGN.md §6), and
+GQA kv-heads smaller than the model axis are stored replicated (Megatron's
+kv-replication expressed as a spec).
+
+Stacked body parameters ([n_periods, ...]) get a leading None automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.transformer import abstract_params
+from ..serving.decode import abstract_caches
+from ..train.optimizer import abstract_opt_state
+from .mesh import dp_axes
+
+# leaf name -> logical axis per (trailing) dim
+AXES_BY_NAME: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "in_proj": (None, "embed"),
+    "img_proj_w1": (None, "embed"),
+    "img_proj_w2": (None, "embed"),
+    # attention
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None),
+    "wo": ("heads", None, "embed"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    # dense FFN (also mLSTM up/gate/down: same shapes/meaning)
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    # MoE
+    "router": ("embed", None),
+    "e_gate": ("experts", "embed", None),
+    "e_up": ("experts", "embed", None),
+    "e_down": ("experts", None, "embed"),
+    "s_gate": ("embed", "mlp"),
+    "s_up": ("embed", "mlp"),
+    "s_down": ("mlp", "embed"),
+    # RG-LRU
+    "w_in": ("embed", "lru"),
+    "w_gate_branch": ("embed", "lru"),
+    "conv_w": (None, "lru"),
+    "w_rgate": ("lru", None),
+    "w_igate": ("lru", None),
+    "lam": ("lru",),
+    "w_out": ("lru", "embed"),
+    # mLSTM extras
+    "w_q": ("mlp", None),
+    "w_k": ("mlp", None),
+    "w_v": ("mlp", None),
+    "w_i": ("mlp", None),
+    "w_f": ("mlp", None),
+    "b_i": (None,),
+    "b_f": (None,),
+    "out_norm": (None,),
+    # sLSTM
+    "w_x": ("embed", "mlp"),
+    "r_h": ("heads", None, None),
+    "b": (None,),
+    # norms
+    "ln1": (None,), "ln2": (None,), "final_norm": (None,),
+    "norm": (None,), "q_norm": (None,), "k_norm": (None,),
+    # optimizer scalars
+    "step": (),
+}
+
+LOGICAL_TO_MESH: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),           # FSDP
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "lru": ("model",),
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(last.key) if hasattr(last, "key") else str(last)
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    logical_to_mesh: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(LOGICAL_TO_MESH))
+
+    def resolve(self, shape: Sequence[int],
+                logical: Sequence[Optional[str]]) -> P:
+        """Assign mesh axes to dims by divisibility; never reuse an axis."""
+        logical = tuple(logical)
+        if len(logical) < len(shape):                 # stacked leading dims
+            logical = (None,) * (len(shape) - len(logical)) + logical
+        used = set()
+        spec = []
+        for dim, name in zip(shape, logical):
+            assigned = None
+            if name is not None:
+                for ax in self.logical_to_mesh.get(name, ()):
+                    if ax in self.mesh.axis_names and ax not in used \
+                            and dim % self.mesh.shape[ax] == 0 \
+                            and self.mesh.shape[ax] > 1:
+                        assigned = ax
+                        used.add(ax)
+                        break
+            spec.append(assigned)
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def _tree_shardings(tree, rules: ShardingRules, overrides=None):
+    def one(path, leaf):
+        name = _leaf_name(path)
+        logical = (overrides or {}).get(name, AXES_BY_NAME.get(name))
+        if logical is None:
+            logical = (None,) * len(leaf.shape)
+        return rules.named(rules.resolve(leaf.shape, logical))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def embed_overrides(embed_vocab_shard: bool):
+    """embed_vocab_shard=False stores the embedding table vocab-REPLICATED
+    (d still FSDP-sharded): the token gather becomes local after one cheap
+    weight all-gather instead of forcing a full-activation all-reduce of the
+    masked partial gather (§Perf-C iteration 1)."""
+    if embed_vocab_shard:
+        return {}
+    return {"embed": (None, "embed")}
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                    embed_vocab_shard: bool = True):
+    rules = ShardingRules(mesh)
+    return _tree_shardings(abstract_params(cfg), rules,
+                           embed_overrides(embed_vocab_shard))
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                  embed_vocab_shard: bool = True):
+    rules = ShardingRules(mesh)
+    return _tree_shardings(
+        abstract_opt_state(abstract_params(cfg)), rules,
+        embed_overrides(embed_vocab_shard))
+
+
+def _batch_dim_spec(mesh: Mesh, b: int):
+    """Shard the batch dim over as many dp axes as divide it."""
+    axes = []
+    rem = b
+    for a in dp_axes(mesh):
+        sz = mesh.shape[a]
+        if sz > 1 and rem % sz == 0:
+            axes.append(a)
+            rem //= sz
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    """Inputs: [B, ...] -> batch over dp axes, rest replicated."""
+    def one(path, leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        bspec = _batch_dim_spec(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(bspec, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, s_max: int,
+                    *, shard_cache_seq: bool = True):
+    """KV caches: [.., B, S, Hkv, hd] -> (dp on B, model on S) — S-sharded
+    flash-decode layout.  Recurrent states: dp on B, model on the state
+    width when divisible."""
+    rules = ShardingRules(mesh)
+    caches = abstract_caches(cfg, batch, s_max)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if name in ("k", "v") and nd >= 4:
+            lead = (None,) * (nd - 4)
+            bspec = _batch_dim_spec(mesh, leaf.shape[-4])
+            sspec = None
+            if shard_cache_seq and "model" in mesh.axis_names \
+                    and leaf.shape[-3] % mesh.shape["model"] == 0:
+                sspec = "model"
+            return rules.named(P(*lead, bspec, sspec, None, None))
+        # recurrent states: batch dim is first non-stacked dim
+        lead_n = 1 if (path and getattr(path[0], "key", None) == "body") else 0
+        spec = [None] * nd
+        if nd > lead_n:
+            spec[lead_n] = _batch_dim_spec(mesh, leaf.shape[lead_n])
+        # shard the trailing width over model when large & divisible
+        if nd >= 2 and leaf.shape[-1] >= 1024 and "model" in mesh.axis_names \
+                and leaf.shape[-1] % mesh.shape["model"] == 0:
+            spec[-1] = "model"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return rules.named(P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def logit_constraint(mesh: Mesh, batch: int, vocab: int):
+    """with_sharding_constraint closure for [B, S, V] logits: batch over dp,
+    vocab over model (when divisible).  Without this, XLA materializes the
+    full f32 logits per device — ~40 GB at production shapes (§Perf iter 0).
+    """
+    bspec = _batch_dim_spec(mesh, batch)
+    vspec = "model" if ("model" in mesh.axis_names
+                        and vocab % mesh.shape["model"] == 0) else None
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(bspec, None, vspec)))
+    return constrain
+
+
+def act_constraint(mesh: Mesh, batch: int, *, tp_act: bool = False):
+    """with_sharding_constraint closure for [B, S, d] block activations.
+
+    Baseline: batch over dp axes, d replicated.  ``tp_act=True`` also shards
+    d over model (halves the per-layer all-gathers at the cost of norm
+    collectives) — a §Perf hillclimb lever.
+    """
+    bspec = _batch_dim_spec(mesh, batch)
+    dspec = "model" if tp_act else None
+
+    def constrain(x):
+        if x.ndim == 3 and (x.shape[-1] % mesh.shape["model"] == 0
+                            or dspec is None):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, None, dspec)))
+        return x
+    return constrain

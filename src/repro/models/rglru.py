@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, De et al., 2024).
+
+The Real-Gated Linear Recurrent Unit is a *diagonal* linear recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-dependent gates,
+
+which we evaluate with ``jax.lax.associative_scan`` during training/prefill —
+O(log S) depth, fully parallel across the sequence (the TPU-native
+formulation; the original GPU implementation uses a custom linear-scan
+kernel) — and as a single fused step during decode.  State is O(1) in
+sequence length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+from .xlstm import _causal_conv1d
+
+_C = 8.0  # the paper's fixed gate sharpness
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int = 4,
+               dtype=jnp.bfloat16) -> Dict:
+    k = jax.random.split(key, 6)
+    s = lambda i, *sh: (0.02 * jax.random.normal(k[i], sh, jnp.float32))
+    # Lambda init so a^(1/c) is uniform in [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(k[5], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))      # inverse softplus
+    return {
+        "norm": jnp.zeros(d_model, jnp.float32),
+        "w_in": s(0, d_model, width).astype(dtype),
+        "w_gate_branch": s(1, d_model, width).astype(dtype),
+        "conv_w": 0.1 * jax.random.normal(k[2], (conv_width, width), jnp.float32),
+        "w_rgate": s(3, width, width).astype(dtype),   # r_t gate
+        "w_igate": s(4, width, width).astype(dtype),   # i_t gate
+        "lam": lam,
+        "w_out": s(5, width, d_model).astype(dtype),
+    }
+
+
+def rglru_state_init(batch: int, width: int, conv_width: int = 4):
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, width), jnp.bfloat16),
+    }
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) @ params["w_rgate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ params["w_igate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xc.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_apply(params, x, state=None):
+    """x [B,S,d]; returns (y [B,S,d], new_state).  Parallel associative scan
+    over S for S > 1; exact single step for S == 1 (decode)."""
+    B, S, d = x.shape
+    width = params["w_in"].shape[1]
+    if state is None:
+        state = rglru_state_init(B, width, params["conv_w"].shape[0])
+    xn = rms_norm(x, params["norm"])
+    xi = xn @ params["w_in"]                          # [B,S,w]
+    xg = jax.nn.gelu(xn @ params["w_gate_branch"])    # gate branch
+    xc, conv_cache = _causal_conv1d(xi, params["conv_w"], state["conv"])
+    a, gx = _gates(params, xc)                        # [B,S,w] f32
+
+    if S == 1:
+        h = a[:, 0] * state["h"] + gx[:, 0]
+        hs = h[:, None]
+    else:
+        # fold the carried-in state into the first element, then assoc-scan
+        gx = gx.at[:, 0].add(a[:, 0] * state["h"])
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        h = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * xg) @ params["w_out"]
+    return x + y, {"h": h, "conv": conv_cache.astype(jnp.bfloat16)}

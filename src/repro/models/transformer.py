@@ -1,0 +1,385 @@
+"""Unified decoder-only model covering all ten assigned architectures.
+
+The layer stack is a repeating ``block_pattern`` over
+{attn, local, rglru, mlstm, slstm}; the forward pass scans over pattern
+*periods* with stacked per-period parameters (``jax.lax.scan``) so HLO size
+and compile time stay ~depth-independent.  Three stack segments:
+
+  head : the leading ``first_dense_layers`` (MoE models put dense FFNs
+         there), applied unrolled,
+  body : ``n_periods`` repetitions of the pattern, scanned,
+  tail : ``n_layers`` mod pattern leftovers, unrolled.
+
+Parameters are plain nested dicts of jnp arrays; leaf NAMES carry the
+sharding meaning (launch/sharding.py maps name -> logical axes -> mesh axes),
+so the same tree works for real init and for ``jax.eval_shape`` dry-runs.
+
+Modality frontends (audio frames / VLM patches) are STUBS per the
+assignment: ``input_specs`` hands the model precomputed frame/patch
+embeddings; the in-model part (linear/MLP projector, embedding merge) is
+real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM,
+                     BLOCK_RECURRENT, BLOCK_SLSTM, FAMILY_AUDIO, FAMILY_VLM,
+                     ModelConfig)
+from .layers import (apply_rope, decode_attention, flash_attention,
+                     flash_attention_cv, local_attention, moe_ffn, rms_norm,
+                     swiglu)
+from . import rglru as rg
+from . import xlstm as xl
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Layer segments: head (unrolled) / body (scanned periods) / tail (unrolled)
+# ---------------------------------------------------------------------------
+
+def stack_segments(cfg: ModelConfig) -> Tuple[List[int], List[List[int]], List[int]]:
+    """Layer indices of (head, body-periods, tail)."""
+    head = list(range(cfg.first_dense_layers))
+    rest = list(range(cfg.first_dense_layers, cfg.n_layers))
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_periods = len(rest) // period
+    body = [rest[i * period:(i + 1) * period] for i in range(n_periods)]
+    tail = rest[n_periods * period:]
+    return head, body, tail
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (per block kind)
+# ---------------------------------------------------------------------------
+
+def _norm_init(d):  # RMSNorm scale (stored as delta from 1)
+    return jnp.zeros((d,), jnp.float32)
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (s * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_attn_block(key, cfg: ModelConfig, layer: int, local: bool) -> Params:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    p: Params = {
+        "ln1": _norm_init(d),
+        "wq": _dense(ks[0], (d, H, hd), dt),
+        "wk": _dense(ks[1], (d, Hkv, hd), dt),
+        "wv": _dense(ks[2], (d, Hkv, hd), dt),
+        "wo": _dense(ks[3], (H, hd, d), dt, scale=1.0 / np.sqrt(H * hd)),
+        "ln2": _norm_init(d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = _norm_init(hd)
+        p["k_norm"] = _norm_init(hd)
+    p["ffn"] = init_ffn(ks[4], cfg, layer)
+    return p
+
+
+def init_ffn(key, cfg: ModelConfig, layer: int) -> Params:
+    d = cfg.d_model
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    if cfg.is_moe and layer >= cfg.first_dense_layers:
+        E, f = cfg.n_experts, cfg.expert_d_ff
+        p: Params = {
+            "router": _dense(ks[0], (d, E), jnp.float32),
+            "e_gate": _dense(ks[1], (E, d, f), dt),
+            "e_up": _dense(ks[2], (E, d, f), dt),
+            "e_down": _dense(ks[3], (E, f, d), dt, scale=1.0 / np.sqrt(f)),
+        }
+        if cfg.n_shared_experts:
+            fs = cfg.n_shared_experts * f
+            p["s_gate"] = _dense(ks[4], (d, fs), dt)
+            p["s_up"] = _dense(ks[5], (d, fs), dt)
+            p["s_down"] = _dense(ks[6], (fs, d), dt, scale=1.0 / np.sqrt(fs))
+        return p
+    ff = cfg.dense_d_ff if (cfg.is_moe and cfg.dense_d_ff) else cfg.d_ff
+    return {
+        "w_gate": _dense(ks[0], (d, ff), dt),
+        "w_up": _dense(ks[1], (d, ff), dt),
+        "w_down": _dense(ks[2], (ff, d), dt, scale=1.0 / np.sqrt(ff)),
+    }
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 2)
+    p = rg.rglru_init(ks[0], d, w, cfg.conv1d_width, _dtype(cfg.param_dtype))
+    if cfg.d_ff:
+        p["ffn"] = init_ffn(ks[1], cfg, layer=10**6)  # always-dense FFN
+        p["ln2"] = _norm_init(d)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, layer: int) -> Params:
+    kind = cfg.block_kind(layer)
+    if kind == BLOCK_ATTN:
+        return init_attn_block(key, cfg, layer, local=False)
+    if kind == BLOCK_LOCAL_ATTN:
+        return init_attn_block(key, cfg, layer, local=True)
+    if kind == BLOCK_RECURRENT:
+        return init_rglru_block(key, cfg)
+    if kind == BLOCK_MLSTM:
+        p = xl.mlstm_init(key, cfg.d_model, cfg.n_heads, cfg.conv1d_width,
+                          _dtype(cfg.param_dtype))
+        return p
+    if kind == BLOCK_SLSTM:
+        return xl.slstm_init(key, cfg.d_model, cfg.n_heads,
+                             _dtype(cfg.param_dtype))
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, dt = cfg.d_model, _dtype(cfg.param_dtype)
+    head, body, tail = stack_segments(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+
+    p: Params = {}
+    if cfg.family == FAMILY_AUDIO:
+        # EnCodec frame embeddings arrive precomputed (stub); in-model proj
+        p["in_proj"] = _dense(keys[-1], (cfg.frontend_dim(), d), dt)
+    else:
+        p["embed"] = _dense(keys[-2], (cfg.vocab, d), dt, scale=0.02)
+    if cfg.family == FAMILY_VLM:
+        dv = cfg.frontend_dim()
+        p["img_proj_w1"] = _dense(keys[-3], (dv, d), dt)
+        p["img_proj_w2"] = _dense(keys[-4], (d, d), dt)
+
+    if head:
+        p["head_layers"] = [init_block(keys[i], cfg, i) for i in head]
+    if body:
+        per_layer = [[init_block(keys[ls[j]], cfg, ls[j]) for ls in body]
+                     for j in range(len(body[0]))]
+        # stack across periods: leaf -> [n_periods, ...]
+        p["body"] = [jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+                     for stacked in per_layer]
+    if tail:
+        p["tail_layers"] = [init_block(keys[i], cfg, i) for i in tail]
+
+    p["final_norm"] = _norm_init(d)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense(keys[-3], (d, cfg.vocab), dt, scale=0.02)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct tree (no allocation) — used by the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Block application (shared by train forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg: ModelConfig, x):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,Hkv,hd] with bias/qk-norm."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_ffn(p, cfg: ModelConfig, x, layer_is_moe: bool, moe_fn=None):
+    """x [B,S,d] -> (y, aux_loss).  ``moe_fn`` (optional) overrides the
+    routed-expert implementation (e.g. layers.make_tp_moe_fn — §Perf-B)."""
+    if layer_is_moe:
+        B, S, d = x.shape
+        if moe_fn is not None:
+            y, aux = moe_fn(p, x)
+        else:
+            flat = x.reshape(B * S, d)
+            y, aux = moe_ffn(flat, p["router"], p["e_gate"], p["e_up"],
+                             p["e_down"], top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor)
+            y = y.reshape(B, S, d)
+        if "s_gate" in p:
+            y = y + swiglu(x, p["s_gate"], p["s_up"], p["s_down"])
+        return y, aux
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0.0)
+
+
+def apply_attn_block(p, cfg: ModelConfig, x, positions, *, local: bool,
+                     layer_is_moe: bool, q_chunk: int = 512,
+                     kv_chunk: int = 512, causal_skip: bool = False,
+                     moe_fn=None, attn_remat: bool = False,
+                     flash_cv: bool = False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    if local:
+        attn = local_attention(q, k, v, window=cfg.local_window, q_chunk=qc)
+    elif flash_cv:
+        attn = flash_attention_cv(q, k, v, qc, kc)   # custom-VJP (§Perf-C8)
+    else:
+        attn = flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc,
+                               causal_skip=causal_skip,
+                               remat_qchunk=attn_remat)
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _apply_ffn(p["ffn"], cfg, h2, layer_is_moe, moe_fn)
+    return x + y, aux
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, *,
+                layer_is_moe: bool, q_chunk: int = 512, kv_chunk: int = 512,
+                causal_skip: bool = False, moe_fn=None,
+                attn_remat: bool = False, flash_cv: bool = False):
+    """Training/prefill-mode application (full sequence, no carried state)."""
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL_ATTN):
+        return apply_attn_block(p, cfg, x, positions,
+                                local=(kind == BLOCK_LOCAL_ATTN),
+                                layer_is_moe=layer_is_moe, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, causal_skip=causal_skip,
+                                moe_fn=moe_fn, attn_remat=attn_remat,
+                                flash_cv=flash_cv)
+    if kind == BLOCK_RECURRENT:
+        y, _ = rg.rglru_apply(p, x)
+        if cfg.d_ff:
+            h2 = rms_norm(y, p["ln2"], cfg.norm_eps)
+            f, _aux = _apply_ffn(p["ffn"], cfg, h2, False)
+            y = y + f
+        return y, jnp.float32(0.0)
+    if kind == BLOCK_MLSTM:
+        y, _ = xl.mlstm_apply(p, x, n_heads=cfg.n_heads,
+                              chunk=cfg.mlstm_chunk)
+        return y, jnp.float32(0.0)
+    if kind == BLOCK_SLSTM:
+        y, _ = xl.slstm_apply(p, x, n_heads=cfg.n_heads,
+                              remat_chunk=cfg.mlstm_chunk)
+        return y, jnp.float32(0.0)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Token/frontend embedding -> [B,S,d] activations."""
+    dt = _dtype(cfg.compute_dtype)
+    if cfg.family == FAMILY_AUDIO:
+        # precomputed EnCodec frame embeddings [B,S,d_frame] (frontend stub)
+        x = batch["frame_embeds"].astype(dt) @ params["in_proj"].astype(dt)
+        return x
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.family == FAMILY_VLM and "image_embeds" in batch:
+        # anyres patch embeddings [B,F,dv] (frontend stub) -> 2-layer projector
+        img = batch["image_embeds"].astype(dt)
+        img = jax.nn.gelu(img @ params["img_proj_w1"].astype(dt))
+        img = img @ params["img_proj_w2"].astype(dt)
+        F = img.shape[1]
+        # image tokens occupy the first F positions (anyres prefix layout)
+        x = jnp.concatenate([img, x[:, F:]], axis=1)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = True, q_chunk: int = 512, kv_chunk: int = 512,
+            causal_skip: bool = False, act_shard=None,
+            logit_shard=None, moe_fn=None,
+            attn_remat: bool = False,
+            flash_cv: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,vocab] f32, aux_loss scalar).
+
+    ``logit_shard`` (a with_sharding_constraint closure) keeps the [B,S,V]
+    logits vocab-sharded over the model axis — REQUIRED to fit HBM at
+    production shapes (an unsharded f32 logits tensor for B=16/dev, S=4096,
+    V=152k is ~40 GB/device; see EXPERIMENTS.md §Perf iteration 0)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, d = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    head, body, tail = stack_segments(cfg)
+    aux_total = jnp.float32(0.0)
+    constrain = act_shard if act_shard is not None else (lambda t: t)
+
+    for i, li in enumerate(head):
+        x, aux = apply_block(params["head_layers"][i], cfg, cfg.block_kind(li),
+                             x, positions, layer_is_moe=False,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk,
+                             causal_skip=causal_skip, moe_fn=moe_fn,
+                             attn_remat=attn_remat, flash_cv=flash_cv)
+        x = constrain(x)
+        aux_total += aux
+
+    if body:
+        kinds = [cfg.block_kind(li) for li in body[0]]
+        moe_flags = [cfg.is_moe and li >= cfg.first_dense_layers
+                     for li in body[0]]
+
+        def period_fn(x, period_params):
+            aux_p = jnp.float32(0.0)
+            for j, kind in enumerate(kinds):
+                x, aux = apply_block(period_params[j], cfg, kind, x, positions,
+                                     layer_is_moe=moe_flags[j],
+                                     q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                     causal_skip=causal_skip, moe_fn=moe_fn,
+                                     attn_remat=attn_remat, flash_cv=flash_cv)
+                x = constrain(x)
+                aux_p += aux
+            return x, aux_p
+
+        if remat:
+            period_fn = jax.checkpoint(period_fn)
+
+        def scan_body(carry, period_params):
+            x, aux_acc = carry
+            x, aux_p = period_fn(x, period_params)
+            return (x, aux_acc + aux_p), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_body, (x, aux_total), params["body"])
+
+    for i, li in enumerate(tail):
+        x, aux = apply_block(params["tail_layers"][i], cfg, cfg.block_kind(li),
+                             x, positions,
+                             layer_is_moe=cfg.is_moe and li >= cfg.first_dense_layers,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk,
+                             causal_skip=causal_skip, moe_fn=moe_fn,
+                             attn_remat=attn_remat, flash_cv=flash_cv)
+        x = constrain(x)
+        aux_total += aux
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if logit_shard is not None:
+        logits = logit_shard(logits)
+    return logits, aux_total

@@ -1,0 +1,279 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate connections).
+
+Both are implemented as exact recurrences with ``lax.scan`` over time —
+mLSTM additionally exposes single-step functions for decode.  States are
+O(1) in sequence length, which is what makes the 500k-context decode shape
+runnable for this family (see DESIGN.md §long-context).
+
+Simplifications vs. the paper (noted in DESIGN.md): block-diagonal
+projections are dense per head; sLSTM omits the post-block projection
+factor, mLSTM uses projection factor 2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+
+def _causal_conv1d(x, w, cache=None):
+    """x [B,S,D], w [cw, D] depthwise.  Returns (y [B,S,D], new_cache)."""
+    cw = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache, x], axis=1)        # [B, cw-1+S, D]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    new_cache = xp[:, xp.shape[1] - (cw - 1):]
+    return jax.nn.silu(y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, conv_width: int = 4,
+               dtype=jnp.bfloat16) -> Dict:
+    up = 2 * d_model
+    hd = up // n_heads
+    k = jax.random.split(key, 8)
+    s = lambda *sh: 0.02 * jax.random.normal(k[len(sh) % 8], sh, jnp.float32)
+    return {
+        "norm": jnp.zeros(d_model, jnp.float32),
+        "w_up": s(d_model, up).astype(dtype),
+        "w_gate": s(d_model, up).astype(dtype),
+        "conv_w": (0.1 * jax.random.normal(k[2], (conv_width, up), jnp.float32)),
+        "w_q": s(up, up).astype(dtype),
+        "w_k": s(up, up).astype(dtype),
+        "w_v": s(up, up).astype(dtype),
+        "w_i": s(up, n_heads).astype(jnp.float32),
+        "b_i": jnp.zeros(n_heads, jnp.float32),
+        "w_f": s(up, n_heads).astype(jnp.float32),
+        "b_f": 3.0 * jnp.ones(n_heads, jnp.float32),   # forget-gate bias init
+        "out_norm": jnp.zeros(up, jnp.float32),
+        "w_down": s(up, d_model).astype(dtype),
+    }
+
+
+def mlstm_state_init(batch: int, d_model: int, n_heads: int,
+                     conv_width: int = 4):
+    up = 2 * d_model
+    hd = up // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, up), jnp.bfloat16),
+    }
+
+
+def _mlstm_step(state, qkvif):
+    """One stabilized mLSTM recurrence step (per head)."""
+    q, k_, v, logi, logf = qkvif      # q/k/v [B,H,hd]; logi/logf [B,H]
+    C, n, m = state
+    m_new = jnp.maximum(logf + m, logi)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    i_ = jnp.exp(logi - m_safe)
+    f_ = jnp.where(jnp.isfinite(m), jnp.exp(logf + m - m_safe), 0.0)
+    C_new = f_[..., None, None] * C + i_[..., None, None] * (
+        v[..., None, :] * k_[..., :, None])           # [B,H,hd_k,hd_v]
+    n_new = f_[..., None] * n + i_[..., None] * k_
+    h_num = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(params, x, state=None, *, n_heads: int, chunk: int = 0):
+    """x [B,S,d] (S may be 1 for decode).  Returns (y [B,S,d], new_state).
+
+    ``chunk > 0`` selects the CHUNKWISE-PARALLEL evaluation (exact, same
+    recurrence): per-timestep outer-product updates become per-chunk
+    matmuls and the autodiff stash shrinks from O(S·|C|) to O(S/T·|C|) —
+    the beyond-paper optimization recorded in EXPERIMENTS.md §Perf-A.
+    """
+    B, S, d = x.shape
+    up = 2 * d
+    hd = up // n_heads
+    if state is None:
+        state = mlstm_state_init(B, d, n_heads, params["conv_w"].shape[0])
+    xn = rms_norm(x, params["norm"])
+    xu = xn @ params["w_up"]
+    xz = xn @ params["w_gate"]
+    xc, conv_cache = _causal_conv1d(xu, params["conv_w"], state["conv"])
+
+    def heads(t, w):
+        return (t @ w).reshape(B, S, n_heads, hd)
+
+    q = heads(xc, params["w_q"]).astype(jnp.float32) / np.sqrt(hd)
+    k_ = heads(xc, params["w_k"]).astype(jnp.float32) / np.sqrt(hd)
+    v = heads(xu, params["w_v"]).astype(jnp.float32)
+    logi = (xu.astype(jnp.float32) @ params["w_i"] + params["b_i"])   # [B,S,H]
+    logf = jax.nn.log_sigmoid(
+        xu.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+
+    if chunk and S > 1 and S % min(chunk, S) == 0:
+        (C, n, m), h = _mlstm_chunkwise(
+            q, k_, v, logi, logf,
+            (state["C"], state["n"], state["m"]), min(chunk, S))
+    else:
+        def scan_step(carry, t):
+            qt, kt, vt, it, ft = t
+            return _mlstm_step(carry, (qt, kt, vt, it, ft))
+
+        seq = (q.transpose(1, 0, 2, 3), k_.transpose(1, 0, 2, 3),
+               v.transpose(1, 0, 2, 3), logi.transpose(1, 0, 2),
+               logf.transpose(1, 0, 2))
+        (C, n, m), hs = jax.lax.scan(
+            scan_step, (state["C"], state["n"], state["m"]), seq)
+        h = hs.transpose(1, 0, 2, 3)                   # [B,S,H,hd]
+    h = h.reshape(B, S, up)
+    h = rms_norm(h.astype(x.dtype), params["out_norm"])
+    y = (h * jax.nn.silu(xz)) @ params["w_down"]
+    new_state = {"C": C, "n": n, "m": m, "conv": conv_cache.astype(jnp.bfloat16)}
+    return x + y, new_state
+
+
+def _mlstm_chunkwise(q, k_, v, logi, logf, carry, T: int):
+    """Exact chunkwise-parallel mLSTM (stabilized, matches _mlstm_step).
+
+    Sequential recurrence, unrolled within a chunk of length T (chunk-local
+    cumulative log-forget F_t = sum_{s<=t} logf_s, u_s = logi_s - F_s,
+    g_t = max(m_prev, cummax_{s<=t} u_s), m_t = F_t + g_t):
+
+      h_t  = [ exp(m_prev - g_t) * q_t C_prev
+               + sum_{s<=t} exp(u_s - g_t) (q_t.k_s) v_s ] / den_t
+      den_t = max(|exp(m_prev - g_t) * q_t.n_prev
+               + sum_{s<=t} exp(u_s - g_t) (q_t.k_s)|, 1)
+
+    i.e. one [T,T] decay-masked attention matmul per chunk plus a rank-T
+    carry update — O(S/T) state round-trips instead of O(S).
+    """
+    B, S, H, hd = q.shape
+    nc = S // T
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                     # [B,H,hd,hd], [B,H,hd], [B,H]
+        qc, kc, vc, ic, fc = inp            # [B,T,H,hd] / [B,T,H]
+        F = jnp.cumsum(fc, axis=1)          # [B,T,H]
+        u = ic - F                          # [B,T,H]
+        g = jnp.maximum(m[:, None], jax.lax.cummax(u, axis=1))   # [B,T,H]
+        # intra-chunk decay-masked scores
+        scores = jnp.einsum("bthd,bshd->bhts", qc, kc)           # [B,H,T,T]
+        w = jnp.exp(u.transpose(0, 2, 1)[:, :, None, :]
+                    - g.transpose(0, 2, 1)[:, :, :, None])       # [B,H,T,S<=T]
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        wts = jnp.where(mask[None, None], scores * w, 0.0)
+        # carry path
+        cdec = jnp.exp(m[:, None] - g)                           # [B,T,H]
+        h_carry = jnp.einsum("bthd,bhde->bthe", qc, C) * cdec[..., None]
+        n_carry = jnp.einsum("bthd,bhd->bth", qc, n) * cdec
+        h_num = h_carry + jnp.einsum("bhts,bshe->bthe", wts, vc)
+        den = n_carry + wts.sum(axis=-1).transpose(0, 2, 1)      # [B,T,H]
+        h = h_num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # chunk-end carry update (position T): m_T = F_T + g_T
+        FT = F[:, -1]                                            # [B,H]
+        gT = g[:, -1]
+        m_new = FT + gT
+        dec_prev = jnp.exp(m + FT - m_new)                       # [B,H]
+        kv_w = jnp.exp(u - gT[:, None])                          # [B,T,H]
+        C_new = dec_prev[..., None, None] * C + jnp.einsum(
+            "bthd,bthe,bth->bhde", kc, vc, kv_w)
+        n_new = dec_prev[..., None] * n + jnp.einsum(
+            "bthd,bth->bhd", kc, kv_w)
+        return (C_new, n_new, m_new), h
+
+    qs = q.reshape(B, nc, T, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = k_.reshape(B, nc, T, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, T, H, hd).transpose(1, 0, 2, 3, 4)
+    is_ = logi.reshape(B, nc, T, H).transpose(1, 0, 2, 3)
+    fs = logf.reshape(B, nc, T, H).transpose(1, 0, 2, 3)
+    carry, hs = jax.lax.scan(chunk_step, carry, (qs, ks, vs, is_, fs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return carry, h
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Dict:
+    hd = d_model // n_heads
+    k = jax.random.split(key, 4)
+    w = lambda i: (0.02 * jax.random.normal(k[i], (d_model, 4 * d_model),
+                                            jnp.float32)).astype(dtype)
+    r = (0.02 * jax.random.normal(k[1], (n_heads, hd, 4 * hd), jnp.float32))
+    return {
+        "norm": jnp.zeros(d_model, jnp.float32),
+        "w_x": w(0),                       # input projections (i,f,z,o packed)
+        "r_h": r.astype(dtype),            # recurrent per-head (i,f,z,o packed)
+        "b": jnp.concatenate([jnp.zeros(d_model), 3.0 * jnp.ones(d_model),
+                              jnp.zeros(2 * d_model)]).astype(jnp.float32),
+        "w_out": (0.02 * jax.random.normal(k[2], (d_model, d_model),
+                                           jnp.float32)).astype(dtype),
+    }
+
+
+def slstm_state_init(batch: int, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads, hd), -jnp.inf, jnp.float32),
+        "h": jnp.zeros((batch, n_heads, hd), jnp.float32),
+    }
+
+
+def slstm_apply(params, x, state=None, *, n_heads: int, remat_chunk: int = 0):
+    """Exact sequential sLSTM (recurrent gate connections force a true scan).
+
+    ``remat_chunk > 0``: nested scan — outer over S/T chunks (carries
+    checkpointed), inner T steps wrapped in jax.checkpoint, so the autodiff
+    stash holds per-CHUNK states instead of per-STEP states (§Perf-A4).
+    The recurrence itself cannot be parallelized (recurrent gate
+    connections), so only the stash traffic shrinks, not the depth.
+    """
+    B, S, d = x.shape
+    hd = d // n_heads
+    if state is None:
+        state = slstm_state_init(B, d, n_heads)
+    xn = rms_norm(x, params["norm"])
+    gx = (xn @ params["w_x"]).astype(jnp.float32) + params["b"]   # [B,S,4d]
+    gx = gx.reshape(B, S, n_heads, 4 * hd)
+
+    def step(carry, gxt):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, params["r_h"].astype(jnp.float32))
+        g = gxt + rec                                   # [B,H,4hd]
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        i_ = jnp.exp(gi - m_safe)
+        f_ = jnp.where(jnp.isfinite(m), jnp.exp(logf + m - m_safe), 0.0)
+        c_new = f_ * c + i_ * jnp.tanh(gz)
+        n_new = f_ * n + i_
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry0 = (state["c"], state["n"], state["m"], state["h"])
+    T = min(remat_chunk, S) if remat_chunk else 0
+    if T and S % T == 0 and S > T:
+        nc = S // T
+
+        @jax.checkpoint
+        def chunk(carry, gxc):                          # gxc [T,B,H,4hd]
+            return jax.lax.scan(step, carry, gxc)
+
+        gxc = gx.transpose(1, 0, 2, 3).reshape(nc, T, B, n_heads, 4 * hd)
+        (c, n, m, h), hs = jax.lax.scan(chunk, carry0, gxc)
+        hs = hs.reshape(S, B, n_heads, hd)
+    else:
+        (c, n, m, h), hs = jax.lax.scan(step, carry0, gx.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype) @ params["w_out"]
+    return x + y, {"c": c, "n": n, "m": m, "h": h}

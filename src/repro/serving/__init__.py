@@ -1,0 +1,3 @@
+from .decode import (init_caches, abstract_caches, prefill, decode_step)
+
+__all__ = ["init_caches", "abstract_caches", "prefill", "decode_step"]

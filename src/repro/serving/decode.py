@@ -1,0 +1,368 @@
+"""Serving: prefill + single-token decode against persistent caches.
+
+Cache kinds per block:
+  attn   : full KV cache [B, Smax, Hkv, hd] (RoPE applied at write time)
+  local  : ring KV cache [B, W, Hkv, hd], W = local_window (RoPE at write)
+  rglru  : {h [B,w] f32, conv [B,cw-1,w]}
+  mlstm  : {C [B,H,hk,hv] f32, n, m, conv}
+  slstm  : {c, n, m, h [B,H,hd] f32}
+
+``decode_step`` lowers one new token against a seq_len cache — the shape
+the ``decode_*`` / ``long_*`` dry-run cells require.  Recurrent families
+(xlstm, recurrentgemma) carry O(1)/O(window) state, which is exactly why
+they are the only families that run the ``long_500k`` cell (DESIGN.md).
+
+The cache tree mirrors the parameter tree segments (head list / stacked
+body periods / tail list) so the decode body is a single ``lax.scan`` over
+periods, keeping compile time depth-independent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import rglru as rg
+from ..models import xlstm as xl
+from ..models.config import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM,
+                             BLOCK_RECURRENT, BLOCK_SLSTM, FAMILY_AUDIO,
+                             FAMILY_VLM, ModelConfig)
+from ..models.layers import (apply_rope, flash_attention, local_attention,
+                             rms_norm, swiglu)
+from ..models.transformer import (Params, _apply_ffn, _dtype, _qkv,
+                                  apply_block, embed_inputs, stack_segments)
+
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int):
+    dt = _dtype(cfg.compute_dtype)
+    Hkv, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    if kind == BLOCK_ATTN:
+        return {"k": jnp.zeros((batch, s_max, Hkv, hd), dt),
+                "v": jnp.zeros((batch, s_max, Hkv, hd), dt)}
+    if kind == BLOCK_LOCAL_ATTN:
+        W = min(cfg.local_window, s_max)
+        return {"k": jnp.zeros((batch, W, Hkv, hd), dt),
+                "v": jnp.zeros((batch, W, Hkv, hd), dt)}
+    if kind == BLOCK_RECURRENT:
+        w = cfg.lru_width or cfg.d_model
+        return {"h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dt)}
+    if kind == BLOCK_MLSTM:
+        up = 2 * cfg.d_model
+        hdm = up // H
+        return {"C": jnp.zeros((batch, H, hdm, hdm), jnp.float32),
+                "n": jnp.zeros((batch, H, hdm), jnp.float32),
+                "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv1d_width - 1, up), dt)}
+    if kind == BLOCK_SLSTM:
+        hds = cfg.d_model // H
+        return {"c": jnp.zeros((batch, H, hds), jnp.float32),
+                "n": jnp.zeros((batch, H, hds), jnp.float32),
+                "m": jnp.full((batch, H, hds), -jnp.inf, jnp.float32),
+                "h": jnp.zeros((batch, H, hds), jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int) -> Cache:
+    head, body, tail = stack_segments(cfg)
+    c: Cache = {}
+    if head:
+        c["head_layers"] = [_block_cache(cfg, cfg.block_kind(i), batch, s_max)
+                            for i in head]
+    if body:
+        kinds = [cfg.block_kind(i) for i in body[0]]
+        c["body"] = [jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(body),) + x.shape).copy(),
+            _block_cache(cfg, k, batch, s_max)) for k in kinds]
+    if tail:
+        c["tail_layers"] = [_block_cache(cfg, cfg.block_kind(i), batch, s_max)
+                            for i in tail]
+    return c
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, s_max: int) -> Cache:
+    return jax.eval_shape(lambda: init_caches(cfg, batch, s_max))
+
+
+# ---------------------------------------------------------------------------
+# Single-token block application
+# ---------------------------------------------------------------------------
+
+def _decode_full_attn(p, cfg: ModelConfig, x, cache, pos, layer_is_moe):
+    """x [B,1,d]; full-cache attention at absolute position ``pos``."""
+    B = x.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h)                       # [B,1,H,hd]/[B,1,Hkv,hd]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    S = kc.shape[1]
+    Hkv, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / np.sqrt(hd)
+    mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    attn = jnp.einsum("bhgs,bshd->bhgd", pr, vc.astype(jnp.float32))
+    attn = attn.reshape(B, 1, H, hd).astype(x.dtype)
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _apply_ffn(p["ffn"], cfg, h2, layer_is_moe)
+    return x + y, {"k": kc, "v": vc}
+
+
+def _decode_local_attn(p, cfg: ModelConfig, x, cache, pos, layer_is_moe):
+    """Ring-cache sliding-window attention (slot = pos mod W)."""
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = jnp.mod(pos, W)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # absolute position stored in ring slot j
+    j = jnp.arange(W)
+    base = pos - slot
+    abs_pos = jnp.where(j <= slot, base + j, base - W + j)
+    valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.local_window)
+    Hkv, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / np.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    attn = jnp.einsum("bhgs,bshd->bhgd", pr, vc.astype(jnp.float32))
+    attn = attn.reshape(B, 1, H, hd).astype(x.dtype)
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _apply_ffn(p["ffn"], cfg, h2, layer_is_moe)
+    return x + y, {"k": kc, "v": vc}
+
+
+def _decode_rglru(p, cfg: ModelConfig, x, cache):
+    state = {"h": cache["h"], "conv": cache["conv"]}
+    y, st = rg.rglru_apply(p, x, state)
+    if cfg.d_ff:
+        h2 = rms_norm(y, p["ln2"], cfg.norm_eps)
+        f, _ = _apply_ffn(p["ffn"], cfg, h2, False)
+        y = y + f
+    return y, {"h": st["h"], "conv": st["conv"].astype(cache["conv"].dtype)}
+
+
+def decode_block(p, cfg: ModelConfig, kind: str, x, cache, pos,
+                 layer_is_moe: bool):
+    if kind == BLOCK_ATTN:
+        return _decode_full_attn(p, cfg, x, cache, pos, layer_is_moe)
+    if kind == BLOCK_LOCAL_ATTN:
+        return _decode_local_attn(p, cfg, x, cache, pos, layer_is_moe)
+    if kind == BLOCK_RECURRENT:
+        return _decode_rglru(p, cfg, x, cache)
+    if kind == BLOCK_MLSTM:
+        st = {"C": cache["C"], "n": cache["n"], "m": cache["m"],
+              "conv": cache["conv"]}
+        y, ns = xl.mlstm_apply(p, x, st, n_heads=cfg.n_heads)
+        ns["conv"] = ns["conv"].astype(cache["conv"].dtype)
+        return y, ns
+    if kind == BLOCK_SLSTM:
+        st = {"c": cache["c"], "n": cache["n"], "m": cache["m"],
+              "h": cache["h"]}
+        y, ns = xl.slstm_apply(p, x, st, n_heads=cfg.n_heads)
+        return y, ns
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# decode_step: one new token against seq_len caches
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Params, cfg: ModelConfig, caches: Cache,
+                inputs: Dict[str, jax.Array], pos) -> Tuple[jax.Array, Cache]:
+    """inputs: {"token": [B] int32} (or {"frame_embeds": [B, d_frontend]} for
+    the audio family).  Returns (logits [B, vocab] f32, new caches)."""
+    dt = _dtype(cfg.compute_dtype)
+    if cfg.family == FAMILY_AUDIO:
+        x = inputs["frame_embeds"][:, None, :].astype(dt) @ \
+            params["in_proj"].astype(dt)
+    else:
+        x = jnp.take(params["embed"], inputs["token"][:, None], axis=0).astype(dt)
+
+    head, body, tail = stack_segments(cfg)
+    new_caches: Cache = {}
+
+    if head:
+        ncl = []
+        for i, li in enumerate(head):
+            x, nc = decode_block(params["head_layers"][i], cfg,
+                                 cfg.block_kind(li), x,
+                                 caches["head_layers"][i], pos,
+                                 layer_is_moe=False)
+            ncl.append(nc)
+        new_caches["head_layers"] = ncl
+
+    if body:
+        kinds = [cfg.block_kind(li) for li in body[0]]
+        moe_flags = [cfg.is_moe and li >= cfg.first_dense_layers
+                     for li in body[0]]
+
+        def scan_body(x, pc):
+            period_params, period_caches = pc
+            ncs = []
+            for j, kind in enumerate(kinds):
+                x, nc = decode_block(period_params[j], cfg, kind, x,
+                                     period_caches[j], pos,
+                                     layer_is_moe=moe_flags[j])
+                ncs.append(nc)
+            return x, ncs
+
+        x, new_body = jax.lax.scan(scan_body, x,
+                                   (params["body"], caches["body"]))
+        new_caches["body"] = new_body
+
+    if tail:
+        ncl = []
+        for i, li in enumerate(tail):
+            x, nc = decode_block(params["tail_layers"][i], cfg,
+                                 cfg.block_kind(li), x,
+                                 caches["tail_layers"][i], pos,
+                                 layer_is_moe=cfg.is_moe and li >= cfg.first_dense_layers)
+            ncl.append(nc)
+        new_caches["tail_layers"] = ncl
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the caches
+# ---------------------------------------------------------------------------
+
+def _prefill_attn(p, cfg, x, positions, *, local: bool, layer_is_moe: bool,
+                  q_chunk: int, moe_fn=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    qc = min(q_chunk, S)
+    if local:
+        attn = local_attention(q, k, v, window=cfg.local_window, q_chunk=qc)
+        W = min(cfg.local_window, S)
+        cache = {"k": k[:, S - W:], "v": v[:, S - W:]}  # last W positions
+        # ring layout: slot = pos mod W; re-roll so slot indices line up
+        shift = jnp.mod(S - W, W)
+        cache = {kk: jnp.roll(vv, shift, axis=1) for kk, vv in cache.items()}
+    else:
+        attn = flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=qc)
+        cache = {"k": k, "v": v}
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _apply_ffn(p["ffn"], cfg, h2, layer_is_moe, moe_fn)
+    return x + y, cache
+
+
+def prefill_block(p, cfg: ModelConfig, kind: str, x, positions,
+                  layer_is_moe: bool, q_chunk: int = 512, moe_fn=None):
+    if kind == BLOCK_ATTN:
+        return _prefill_attn(p, cfg, x, positions, local=False,
+                             layer_is_moe=layer_is_moe, q_chunk=q_chunk,
+                             moe_fn=moe_fn)
+    if kind == BLOCK_LOCAL_ATTN:
+        return _prefill_attn(p, cfg, x, positions, local=True,
+                             layer_is_moe=layer_is_moe, q_chunk=q_chunk,
+                             moe_fn=moe_fn)
+    if kind == BLOCK_RECURRENT:
+        y, st = rg.rglru_apply(p, x)
+        if cfg.d_ff:
+            h2 = rms_norm(y, p["ln2"], cfg.norm_eps)
+            f, _ = _apply_ffn(p["ffn"], cfg, h2, False)
+            y = y + f
+        dt = _dtype(cfg.compute_dtype)
+        return y, {"h": st["h"], "conv": st["conv"].astype(dt)}
+    if kind == BLOCK_MLSTM:
+        y, st = xl.mlstm_apply(p, x, n_heads=cfg.n_heads,
+                               chunk=cfg.mlstm_chunk)
+        st["conv"] = st["conv"].astype(_dtype(cfg.compute_dtype))
+        return y, st
+    if kind == BLOCK_SLSTM:
+        return xl.slstm_apply(p, x, n_heads=cfg.n_heads)
+    raise ValueError(kind)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            q_chunk: int = 512, act_shard=None,
+            moe_fn=None) -> Tuple[jax.Array, Cache]:
+    """Returns (last-position logits [B, vocab] f32, caches sized S)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    head, body, tail = stack_segments(cfg)
+    caches: Cache = {}
+    constrain = act_shard if act_shard is not None else (lambda t: t)
+
+    if head:
+        cl = []
+        for i, li in enumerate(head):
+            x, c = prefill_block(params["head_layers"][i], cfg,
+                                 cfg.block_kind(li), x, positions,
+                                 layer_is_moe=False, q_chunk=q_chunk,
+                                 moe_fn=moe_fn)
+            x = constrain(x)
+            cl.append(c)
+        caches["head_layers"] = cl
+
+    if body:
+        kinds = [cfg.block_kind(li) for li in body[0]]
+        moe_flags = [cfg.is_moe and li >= cfg.first_dense_layers
+                     for li in body[0]]
+
+        def scan_body(x, period_params):
+            cs = []
+            for j, kind in enumerate(kinds):
+                x, c = prefill_block(period_params[j], cfg, kind, x,
+                                     positions, layer_is_moe=moe_flags[j],
+                                     q_chunk=q_chunk, moe_fn=moe_fn)
+                x = constrain(x)
+                cs.append(c)
+            return x, cs
+
+        x, body_caches = jax.lax.scan(scan_body, x, params["body"])
+        caches["body"] = body_caches
+
+    if tail:
+        cl = []
+        for i, li in enumerate(tail):
+            x, c = prefill_block(params["tail_layers"][i], cfg,
+                                 cfg.block_kind(li), x, positions,
+                                 layer_is_moe=cfg.is_moe and li >= cfg.first_dense_layers,
+                                 q_chunk=q_chunk, moe_fn=moe_fn)
+            x = constrain(x)
+            cl.append(c)
+        caches["tail_layers"] = cl
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), caches

@@ -1,0 +1,82 @@
+"""Loss and train_step builders.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with in/out shardings from launch/sharding.py.
+Cross-entropy is computed against vocab-sharded logits (XLA inserts the
+model-axis reductions); MoE aux loss and z-loss are folded in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import FAMILY_AUDIO, ModelConfig
+from ..models.transformer import forward
+from .optimizer import OptConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    aux_loss_weight: float = 0.01     # MoE load-balancing
+    z_loss_weight: float = 1e-4       # logit normalizer regularizer
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    causal_skip: bool = False
+    tp_act: bool = False     # shard [B,S,d] activations over model too
+    attn_remat: bool = False # recompute attention tiles in backward (§Perf-C4)
+    flash_cv: bool = False   # custom-VJP flash attention (§Perf-C8)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss_weight: float = 0.0):
+    """logits [B,S,V] f32, labels [B,S] int32.  Mean NLL over unmasked
+    positions, plus z-loss.  Stable log-softmax."""
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # [B,S]
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]                  # [B,S]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    zl = ((lse * lse) * mask).sum() / denom
+    return loss + z_loss_weight * zl, loss
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            tcfg: TrainConfig, act_shard=None, logit_shard=None,
+            moe_fn=None):
+    logits, aux = forward(params, cfg, batch, remat=tcfg.remat,
+                          q_chunk=tcfg.q_chunk, kv_chunk=tcfg.kv_chunk,
+                          causal_skip=tcfg.causal_skip, act_shard=act_shard,
+                          logit_shard=logit_shard, moe_fn=moe_fn,
+                          attn_remat=tcfg.attn_remat, flash_cv=tcfg.flash_cv)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    total, nll = cross_entropy(logits, labels, mask, tcfg.z_loss_weight)
+    total = total + tcfg.aux_loss_weight * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    act_shard=None, logit_shard=None,
+                    moe_fn=None) -> Callable:
+    def train_step(params, opt_state, batch):
+        (total, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, tcfg, act_shard, logit_shard,
+                              moe_fn),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.opt, params, grads, opt_state)
+        metrics = {"loss": total, **parts, **opt_metrics}
+        return params, opt_state, metrics
+    return train_step

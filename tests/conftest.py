@@ -1,0 +1,35 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single CPU device.  Multi-device behaviour
+# is tested via subprocesses (test_mapreduce_multidev.py).
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, OPATEngine, build_catalog,
+                        build_partitions, generate_plan, match_query,
+                        partition_graph)
+from repro.data.generators import subgen_like_graph
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return subgen_like_graph(n_nodes=200, n_edges=600, n_embed=8, seed=2)
+
+
+@pytest.fixture(scope="session")
+def small_pg(small_graph):
+    assign = partition_graph(small_graph, 4, "kway_shem")
+    return build_partitions(small_graph, assign, 4)
+
+
+def run_opat(graph, pg, query, heuristic="max-sn", cap=16384, seed=0,
+             use_pallas=False):
+    catalog = build_catalog(graph)
+    plan = generate_plan(query, graph, catalog)
+    eng = OPATEngine(pg, EngineConfig(cap=cap, use_pallas=use_pallas))
+    return eng.run(plan, heuristic, seed=seed)

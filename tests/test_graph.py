@@ -1,0 +1,116 @@
+"""Partitioned-graph construction invariants (paper Fig. 1 representation)."""
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core import build_partitions, partition_graph, SCHEMES
+from repro.core.graph import GraphBuilder, WILDCARD
+from repro.data.generators import imdb_like_graph, subgen_like_graph
+
+
+def nx_of(graph):
+    g = nx.Graph()
+    g.add_nodes_from(range(graph.n_nodes))
+    g.add_edges_from(zip(graph.edge_src.tolist(), graph.edge_dst.tolist()))
+    return g
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 7])
+def test_partition_covers_all_vertices(small_graph, k):
+    assign = partition_graph(small_graph, k, "fast")
+    pg = build_partitions(small_graph, assign, k)
+    cores = np.concatenate([p.node_gid[: p.n_core] for p in pg.parts])
+    assert sorted(cores.tolist()) == list(range(small_graph.n_nodes))
+
+
+def test_ghosts_are_exactly_cut_targets(small_graph):
+    assign = partition_graph(small_graph, 4, "eco")
+    pg = build_partitions(small_graph, assign, 4)
+    for p in pg.parts:
+        ghosts = set(p.node_gid[p.n_core: p.n_nodes].tolist())
+        expect = set()
+        for e in range(small_graph.n_edges):
+            s, d = int(small_graph.edge_src[e]), int(small_graph.edge_dst[e])
+            if assign[s] == p.pid and assign[d] != p.pid:
+                expect.add(d)
+            if assign[d] == p.pid and assign[s] != p.pid:
+                expect.add(s)
+        assert ghosts == expect
+
+
+def test_ghost_attributes_replicated(small_graph):
+    """The one-edge cut-set extension carries label/value/owner (Sec. 4.2)."""
+    assign = partition_graph(small_graph, 4, "fastsocial")
+    pg = build_partitions(small_graph, assign, 4)
+    for p in pg.parts:
+        for li in range(p.n_core, p.n_nodes):
+            g = int(p.node_gid[li])
+            assert p.node_label[li] == small_graph.node_label[g]
+            assert p.node_owner[li] == assign[g]
+
+
+def test_edge_conservation(small_graph):
+    """Every symmetrized edge occurs exactly once in its endpoint's core
+    adjacency (cut edges once per side via ghosts)."""
+    assign = partition_graph(small_graph, 4, "kway_shem")
+    pg = build_partitions(small_graph, assign, 4)
+    total = sum(int(p.row_ptr[p.n_core]) for p in pg.parts)
+    assert total == 2 * small_graph.n_edges
+
+
+def test_g2l_roundtrip(small_pg):
+    pg = small_pg
+    for p in pg.parts:
+        for li in range(p.n_nodes):
+            g = int(p.node_gid[li])
+            assert pg.g2l[p.pid, g] == li
+
+
+def test_connected_components_matches_networkx(small_graph):
+    assign = partition_graph(small_graph, 4, "kway_shem")
+    pg = build_partitions(small_graph, assign, 4)
+    ours = pg.connected_components_per_partition()
+    for p in pg.parts:
+        core = p.node_gid[: p.n_core].tolist()
+        sub = nx_of(small_graph).subgraph(core)
+        assert ours[p.pid] == nx.number_connected_components(sub)
+
+
+def test_ell_matches_csr(small_pg):
+    for p in small_pg.parts:
+        for v in range(p.n_nodes):
+            s, e = int(p.row_ptr[v]), int(p.row_ptr[v + 1])
+            csr = sorted(zip(p.edge_dst[s:e].tolist(),
+                             p.edge_label[s:e].tolist()))
+            ell = sorted((d, l) for d, l in
+                         zip(p.ell_dst[v].tolist(), p.ell_label[v].tolist())
+                         if d >= 0)
+            assert csr == ell
+
+
+def test_ell_denormalized_dst_attrs(small_pg):
+    for p in small_pg.parts:
+        mask = p.ell_dst >= 0
+        idx = np.clip(p.ell_dst, 0, p.node_gid.shape[0] - 1)
+        assert np.array_equal(p.ell_dlab[mask], p.node_label[idx][mask])
+        assert np.array_equal(p.ell_dgid[mask], p.node_gid[idx][mask])
+
+
+def test_cut_edges_counted(small_graph):
+    assign = partition_graph(small_graph, 4, "rb_shem")
+    pg = build_partitions(small_graph, assign, 4)
+    manual = int(np.sum(assign[small_graph.edge_src]
+                        != assign[small_graph.edge_dst]))
+    assert pg.cut_edges == manual
+
+
+def test_builder_roundtrip():
+    b = GraphBuilder()
+    a = b.add_node("A", value=1.5)
+    c = b.add_node("B")
+    b.add_edge(a, c, "e", directed=True)
+    g = b.build()
+    assert g.n_nodes == 2 and g.n_edges == 1
+    assert g.node_vocab.str_of(int(g.node_label[0])) == "A"
+    assert np.isnan(g.node_value[1])
+    assert bool(g.edge_directed[0])

@@ -1,0 +1,111 @@
+"""Ground-truth matcher semantics on hand-built graphs with known answers."""
+import numpy as np
+
+from repro.core.graph import GraphBuilder
+from repro.core.oracle import match_query
+from repro.core.query import (Query, QueryEdge, QueryNode, QDIR_IN, QDIR_OUT)
+
+
+def build_path_graph():
+    b = GraphBuilder()
+    a = b.add_node("A")
+    x = b.add_node("B")
+    y = b.add_node("B")
+    c = b.add_node("C")
+    b.add_edge(a, x, "e")
+    b.add_edge(a, y, "e")
+    b.add_edge(x, c, "f")
+    return b.build(), (a, x, y, c)
+
+
+def test_path_two_embeddings():
+    g, (a, x, y, c) = build_path_graph()
+    q = Query(nodes=[QueryNode("A"), QueryNode("B")],
+              edges=[QueryEdge(0, 1, "e")])
+    res = match_query(g, q)
+    assert res.shape[0] == 2
+    assert {tuple(r) for r in res.tolist()} == {(a, x), (a, y)}
+
+
+def test_edge_label_filters():
+    g, (a, x, y, c) = build_path_graph()
+    q = Query(nodes=[QueryNode("B"), QueryNode("C")],
+              edges=[QueryEdge(0, 1, "f")])
+    res = match_query(g, q)
+    assert res.shape[0] == 1 and tuple(res[0]) == (x, c)
+
+
+def test_direction_semantics():
+    b = GraphBuilder()
+    u = b.add_node("U")
+    v = b.add_node("V")
+    b.add_edge(u, v, "d", directed=True)
+    g = b.build()
+    q_out = Query(nodes=[QueryNode("U"), QueryNode("V")],
+                  edges=[QueryEdge(0, 1, "d", direction=QDIR_OUT)])
+    q_in = Query(nodes=[QueryNode("U"), QueryNode("V")],
+                 edges=[QueryEdge(0, 1, "d", direction=QDIR_IN)])
+    assert match_query(g, q_out).shape[0] == 1
+    assert match_query(g, q_in).shape[0] == 0
+
+
+def test_value_predicates():
+    b = GraphBuilder()
+    m = b.add_node("M")
+    y1 = b.add_node("year", value=1999.0)
+    y2 = b.add_node("year", value=2005.0)
+    b.add_edge(m, y1, "in")
+    b.add_edge(m, y2, "in")
+    g = b.build()
+    for op, val, expect in [("!=", 1999.0, 1), ("=", 1999.0, 1),
+                            ("<", 2000.0, 1), (">=", 1999.0, 2),
+                            (">", 2005.0, 0)]:
+        q = Query(nodes=[QueryNode("M"),
+                         QueryNode("year", value_op=op, value=val)],
+                  edges=[QueryEdge(0, 1, "in")])
+        assert match_query(g, q).shape[0] == expect, (op, val)
+
+
+def test_nan_value_fails_all_predicates():
+    b = GraphBuilder()
+    m = b.add_node("M")
+    y = b.add_node("year")          # no value
+    b.add_edge(m, y, "in")
+    g = b.build()
+    q = Query(nodes=[QueryNode("M"), QueryNode("year", value_op="!=", value=0.0)],
+              edges=[QueryEdge(0, 1, "in")])
+    assert match_query(g, q).shape[0] == 0
+
+
+def test_injectivity():
+    """Subgraph isomorphism: one node can't bind two slots."""
+    b = GraphBuilder()
+    a = b.add_node("A")
+    c = b.add_node("A")
+    b.add_edge(a, c, "e")
+    g = b.build()
+    q = Query(nodes=[QueryNode("A"), QueryNode("A"), QueryNode("A")],
+              edges=[QueryEdge(0, 1, "e"), QueryEdge(1, 2, "e")])
+    assert match_query(g, q).shape[0] == 0
+
+
+def test_cycle_query():
+    b = GraphBuilder()
+    n = [b.add_node("T") for _ in range(3)]
+    b.add_edge(n[0], n[1], "e")
+    b.add_edge(n[1], n[2], "e")
+    b.add_edge(n[2], n[0], "e")
+    b.add_edge(n[0], b.add_node("T"), "e")  # a dangling extra
+    g = b.build()
+    q = Query(nodes=[QueryNode("T")] * 3,
+              edges=[QueryEdge(0, 1, "e"), QueryEdge(1, 2, "e"),
+                     QueryEdge(2, 0, "e")])
+    res = match_query(g, q)
+    assert res.shape[0] == 6  # 3! automorphic embeddings of the triangle
+
+
+def test_wildcard_label():
+    g, (a, x, y, c) = build_path_graph()
+    q = Query(nodes=[QueryNode("?"), QueryNode("C")],
+              edges=[QueryEdge(0, 1, "?")])
+    assert match_query(g, q).shape[0] == 1

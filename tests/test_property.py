@@ -1,0 +1,116 @@
+"""Hypothesis property tests: the system invariant is
+
+    OPAT(partitioned graph, any scheme, any heuristic) == oracle(whole graph)
+
+for random graphs and random (connected) queries — the paper's correctness
+claim (Sec. 4.2) exercised adversarially.  Also: partitioner validity and
+plan well-formedness under the same generators.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (EngineConfig, MAX_SN, MIN_SN, RANDOM_SN, OPATEngine,
+                        build_catalog, build_partitions, generate_plan,
+                        match_query, partition_graph)
+from repro.core.graph import GraphBuilder
+from repro.core.query import Query, QueryEdge, QueryNode
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow,
+                                       HealthCheck.data_too_large])
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(8, 60))
+    n_vl = draw(st.integers(2, 6))
+    n_el = draw(st.integers(1, 4))
+    density = draw(st.floats(1.0, 3.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder()
+    for i in range(n):
+        val = float(rng.integers(0, 10)) if rng.random() < 0.5 else None
+        b.add_node(f"L{int(rng.integers(0, n_vl))}", value=val)
+    m = int(n * density)
+    for _ in range(m):
+        s, d = rng.integers(0, n, size=2)
+        if s == d:
+            continue
+        b.add_edge(int(s), int(d), f"E{int(rng.integers(0, n_el))}",
+                   directed=bool(rng.random() < 0.3))
+    return b.build(), seed
+
+
+@st.composite
+def random_query(draw, n_vl=6, n_el=4):
+    nq = draw(st.integers(1, 4))
+    nodes = []
+    for _ in range(nq):
+        wild = draw(st.booleans())
+        label = "?" if wild else f"L{draw(st.integers(0, n_vl - 1))}"
+        if draw(st.booleans()):
+            nodes.append(QueryNode(label,
+                                   value_op=draw(st.sampled_from(
+                                       ["", "=", "!=", "<", ">="])),
+                                   value=float(draw(st.integers(0, 10)))))
+        else:
+            nodes.append(QueryNode(label))
+    edges = []
+    for i in range(1, nq):   # spanning-tree edges keep the pattern connected
+        j = draw(st.integers(0, i - 1))
+        el = "?" if draw(st.booleans()) else f"E{draw(st.integers(0, n_el - 1))}"
+        edges.append(QueryEdge(j, i, el,
+                               direction=draw(st.integers(0, 2))))
+    q = Query(nodes=nodes, edges=edges, name="hq")
+    q.validate()
+    return q
+
+
+@given(gq=random_graph(), q=random_query(),
+       k=st.integers(1, 4),
+       scheme=st.sampled_from(["fast", "kway_shem", "ecosocial", "rb_shem"]),
+       heuristic=st.sampled_from([MAX_SN, MIN_SN, RANDOM_SN]))
+@settings(**SETTINGS)
+def test_partitioned_equals_oracle(gq, q, k, scheme, heuristic):
+    g, seed = gq
+    assign = partition_graph(g, k, scheme, seed=seed % 97)
+    pg = build_partitions(g, assign, k)
+    cat = build_catalog(g)
+    plan = generate_plan(q, g, cat)
+    eng = OPATEngine(pg, EngineConfig(cap=16384, q_pad=8))
+    res = eng.run(plan, heuristic, seed=seed % 89)
+    ref = match_query(g, q, q_pad=8)
+    got = np.unique(res.answers, axis=0)
+    assert got.shape == ref.shape and np.array_equal(got, ref)
+
+
+@given(gq=random_graph(), k=st.integers(1, 5),
+       scheme=st.sampled_from(["fast", "eco", "fastsocial", "kway_shem"]))
+@settings(**SETTINGS)
+def test_partition_is_total_function(gq, k, scheme):
+    g, seed = gq
+    assign = partition_graph(g, k, scheme, seed=seed % 97)
+    assert assign.shape == (g.n_nodes,)
+    assert assign.min() >= 0 and assign.max() < k
+    pg = build_partitions(g, assign, k)
+    cores = np.concatenate([p.node_gid[: p.n_core] for p in pg.parts])
+    assert sorted(cores.tolist()) == list(range(g.n_nodes))
+    total = sum(int(p.row_ptr[p.n_core]) for p in pg.parts)
+    assert total == 2 * g.n_edges
+
+
+@given(gq=random_graph(), q=random_query())
+@settings(**SETTINGS)
+def test_plan_well_formed(gq, q):
+    g, _ = gq
+    cat = build_catalog(g)
+    plan = generate_plan(q, g, cat)
+    assert plan.n_steps == len(q.edges)
+    bound = {plan.start_slot}
+    for s in plan.steps:
+        assert s.src_slot in bound
+        bound.add(s.dst_slot)
+    assert bound == set(range(q.n_nodes))
+    assert plan.est_cost >= 0.0

@@ -1,0 +1,75 @@
+"""Catalog, cost-based planning, query validation (paper Sec. 3)."""
+import numpy as np
+import pytest
+
+from repro.core import (build_catalog, generate_plan, make_path_query,
+                        make_star_query)
+from repro.core.query import (OP_BY_NAME, Query, QueryEdge, QueryNode,
+                              QDIR_OUT)
+from repro.data.generators import imdb_like_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return imdb_like_graph(n_movies=100, n_people=120, seed=1)
+
+
+def test_catalog_cardinalities(g):
+    cat = build_catalog(g)
+    assert cat.n_nodes == g.n_nodes and cat.n_edges == g.n_edges
+    yid = g.node_vocab.id_of("year")
+    assert cat.type_card[yid] == int((g.node_label == yid).sum())
+    assert cat.label_cardinality(-1) == g.n_nodes  # wildcard
+    # min/max numeric values per label
+    years = g.node_value[g.node_label == yid]
+    assert cat.value_min[yid] == years.min()
+    assert cat.value_max[yid] == years.max()
+
+
+def test_plan_covers_every_edge_once(g):
+    cat = build_catalog(g)
+    q = make_star_query("movie_3", [("genre_is", "?"), ("in_year", "year"),
+                                    ("produced_by", "?")])
+    plan = generate_plan(q, g, cat)
+    assert plan.n_steps == len(q.edges)
+    # each non-cycle step binds a new slot; all slots end up bound
+    bound = {plan.start_slot}
+    for s in plan.steps:
+        assert s.src_slot in bound
+        bound.add(s.dst_slot)
+    assert bound == set(range(q.n_nodes))
+
+
+def test_plan_prefers_selective_start(g):
+    """Unique-label node should be chosen as start over a wildcard."""
+    cat = build_catalog(g)
+    q = Query(nodes=[QueryNode("movie_7"), QueryNode("?")],
+              edges=[QueryEdge(0, 1, "genre_is")])
+    plan = generate_plan(q, g, cat)
+    assert plan.start_slot == 0
+
+
+def test_plan_cycle_closure(g):
+    cat = build_catalog(g)
+    # triangle pattern: movie-genre, movie-company, and a (nonexistent)
+    # genre-company edge gives a cycle-closing step
+    q = Query(nodes=[QueryNode("?"), QueryNode("genre_0"), QueryNode("?")],
+              edges=[QueryEdge(0, 1, "genre_is"), QueryEdge(0, 2, "produced_by"),
+                     QueryEdge(1, 2, "?")])
+    plan = generate_plan(q, g, cat)
+    closes = [s for s in plan.steps if s.closes_cycle]
+    assert len(closes) == 1
+
+
+def test_disconnected_query_rejected():
+    q = Query(nodes=[QueryNode("a"), QueryNode("b")], edges=[])
+    with pytest.raises(AssertionError):
+        q.validate()
+
+
+def test_max_path_len(g):
+    cat = build_catalog(g)
+    q = make_path_query(["person_3", "?", "?"], ["acted_in", "produced_by"])
+    plan = generate_plan(q, g, cat)
+    assert plan.max_path_len() <= 2
+    assert plan.max_path_len() >= 1

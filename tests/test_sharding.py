@@ -1,0 +1,107 @@
+"""Sharding rule resolver: divisibility fallbacks and spec structure.
+
+The production meshes need 256/512 devices, so resolver logic is tested
+against a lightweight fake mesh (resolve() only reads axis_names/shape);
+NamedSharding construction is tested on the real 1-device mesh.
+"""
+import types
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_test_mesh
+from repro.launch.sharding import (AXES_BY_NAME, ShardingRules,
+                                   param_shardings, opt_shardings,
+                                   batch_shardings, cache_shardings)
+from repro.models.transformer import abstract_params
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def rules():
+    return ShardingRules(FakeMesh())
+
+
+def test_divisible_dims_sharded():
+    spec = rules().resolve((8192, 64, 128), ("embed", "heads", None))
+    assert spec == P("data", "model")
+
+
+def test_non_divisible_heads_fall_back():
+    # qwen2-1.5b: 12 heads % 16 != 0 -> heads replicated, embed still sharded
+    spec = rules().resolve((1536, 12, 128), ("embed", "heads", None))
+    assert spec == P("data")
+
+
+def test_kv_heads_replicated_when_small():
+    spec = rules().resolve((8192, 8, 128), ("embed", "kv_heads", None))
+    assert spec == P("data")
+
+
+def test_axis_never_reused():
+    # [d, d] with both dims wanting 'data' -> second falls back to None
+    spec = rules().resolve((2048, 2048), ("embed", "embed"))
+    assert spec == P("data")
+
+
+def test_odd_vocab_replicated():
+    spec = rules().resolve((49155, 2048), ("vocab", "embed"))
+    assert spec == P(None, "data")
+
+
+def test_experts_shard_over_model():
+    spec = rules().resolve((64, 2048, 1408), ("experts", "embed", None))
+    assert spec == P("model", "data")
+
+
+def test_stacked_leading_dim_gets_none():
+    spec = rules().resolve((28, 2048, 8192), ("embed", "mlp"))
+    assert spec == P(None, "data", "model")
+
+
+def test_all_param_leaves_have_rules():
+    """Every leaf name in every arch's param tree must be covered by
+    AXES_BY_NAME (falls back to replicated otherwise — catch typos)."""
+    for aid, cfg in ARCHS.items():
+        abs_p = abstract_params(reduced(cfg))
+        flat = jax.tree_util.tree_flatten_with_path(abs_p)[0]
+        for path, leaf in flat:
+            name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+            assert name in AXES_BY_NAME, (aid, name)
+
+
+def test_param_shardings_on_real_mesh():
+    mesh = make_test_mesh((1, 1))
+    cfg = reduced(ARCHS["qwen3_4b"])
+    sh = param_shardings(cfg, mesh)
+    abs_p = abstract_params(cfg)
+    # structurally identical trees
+    assert (jax.tree_util.tree_structure(sh)
+            == jax.tree_util.tree_structure(abs_p))
+
+
+def test_batch_shardings_scalar_and_arrays():
+    mesh = make_test_mesh((1, 1))
+    tree = {"tokens": jax.ShapeDtypeStruct((8, 64), np.int32),
+            "pos": jax.ShapeDtypeStruct((), np.int32)}
+    sh = batch_shardings(mesh, tree)
+    assert sh["pos"].spec == P()
+
+
+def test_cache_shardings_kv_seq_axis():
+    fm = FakeMesh()
+    r = ShardingRules(fm)
+    # emulate what cache_shardings computes for a [B,S,H,hd] leaf
+    spec = r.resolve((128, 32768, 8, 128), (None, None, "kv_heads", None))
+    # resolver alone won't shard S; cache_shardings adds model on S:
+    from repro.launch.sharding import _batch_dim_spec
+    assert _batch_dim_spec(fm, 128) == "data"
+    assert _batch_dim_spec(fm, 1) is None
+    assert 32768 % fm.shape["model"] == 0

@@ -1,0 +1,55 @@
+"""SNI/IMA/FAA bookkeeping primitives and load-ratio metrics."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import (RunStats, avg_load_ratio_across_schemes,
+                                avg_load_ratio_for_batch)
+from repro.core.query import OP_EQ, OP_NE, OP_NONE
+from repro.core.state import BindingBatch, QueryState, apply_value_op
+
+
+def test_binding_batch_dedup():
+    rows = np.array([[1, 2], [1, 2], [3, 4], [1, 2]], dtype=np.int32)
+    step = np.array([0, 0, 1, 2], dtype=np.int32)
+    b = BindingBatch(rows=rows, step=step).dedup()
+    assert b.n == 3   # (1,2,s0), (3,4,s1), (1,2,s2)
+
+
+def test_binding_batch_concat_empty():
+    e = BindingBatch.empty(4)
+    r = BindingBatch(rows=np.ones((2, 4), np.int32), step=np.zeros(2, np.int32))
+    assert e.concat(r).n == 2
+    assert r.concat(e).n == 2
+
+
+def test_apply_value_op_numpy_and_nan():
+    vals = np.array([1.0, np.nan, 3.0], dtype=np.float32)
+    assert apply_value_op(OP_NONE, vals, 1.0).all()
+    eq = apply_value_op(OP_EQ, vals, 1.0)
+    assert eq[0] and not eq[1] and not eq[2]
+    ne = apply_value_op(OP_NE, vals, 1.0)
+    assert not ne[0] and not ne[1] and ne[2]   # NaN fails != too
+
+
+def test_query_state_eligibility():
+    st = QueryState.initial(3, 4, np.array([2, 0, 1]))
+    assert st.eligible() == [0, 2]
+    st.fresh_pending[0] = False
+    st.ima[1] = BindingBatch(rows=np.ones((1, 4), np.int32),
+                             step=np.zeros(1, np.int32))
+    assert st.eligible() == [1, 2]
+    assert st.sni_count(1) == 1
+    assert st.sni_count(2) == 1
+
+
+def test_load_ratio_measures():
+    stats = [
+        RunStats("Q1", "fast", "max-sn", loads=[0, 1], l_ideal=2, n_answers=1),
+        RunStats("Q1", "eco", "max-sn", loads=[0, 1, 1, 2], l_ideal=2,
+                 n_answers=1),
+        RunStats("Q2", "fast", "max-sn", loads=[0], l_ideal=1, n_answers=1),
+    ]
+    # h(D)^{Q1}_{pschemes} = mean(2/2, 2/4) = 0.75
+    assert avg_load_ratio_across_schemes(stats, "Q1", "max-sn") == pytest.approx(0.75)
+    # h(D)^{fast}_{qbatch} = mean(1.0, 1.0) = 1.0
+    assert avg_load_ratio_for_batch(stats, "fast", "max-sn") == pytest.approx(1.0)
