@@ -17,8 +17,9 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (ALL_HEURISTICS, EngineConfig, MAX_SN, MIN_SN,
-                        RANDOM_SN, OPATEngine, RunStats, SCHEMES,
+from repro.core import (ALL_HEURISTICS, BUDGET_HEURISTICS, EngineConfig,
+                        MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN, OPATEngine,
+                        RunRequest, RunStats, SCHEMES,
                         avg_load_ratio_across_schemes,
                         avg_load_ratio_for_batch, build_catalog,
                         build_partitions, generate_plan, partition_graph,
@@ -54,6 +55,25 @@ class SweepResult:
     wall_s: float
 
 
+def aggregate_disjuncts(per_disjunct: Sequence[RunStats], query: str,
+                        scheme: str, heuristic: str, **extra) -> RunStats:
+    """Fold the per-disjunct RunStats of one DisjunctiveQuery into the
+    single record the tables consume (shared by every sweep so the
+    aggregation convention cannot diverge between them)."""
+    loads: List[int] = []
+    l_ideal = 0
+    n_answers = 0
+    iters = 0
+    for s in per_disjunct:
+        loads += s.loads
+        l_ideal = max(l_ideal, s.l_ideal)
+        n_answers += s.n_answers
+        iters += s.iterations
+    return RunStats(query=query, scheme=scheme, heuristic=heuristic,
+                    loads=loads, l_ideal=l_ideal, n_answers=n_answers,
+                    iterations=iters, **extra)
+
+
 def run_sweep(workloads: Sequence[Workload],
               schemes: Sequence[str] = tuple(sorted(SCHEMES)),
               heuristics: Sequence[str] = ALL_HEURISTICS,
@@ -71,23 +91,78 @@ def run_sweep(workloads: Sequence[Workload],
             eng = OPATEngine(pg, EngineConfig(cap=cap))
             for dq in wl.dqueries:
                 for heuristic in heuristics:
-                    loads: List[int] = []
-                    l_ideal = 0
-                    n_answers = 0
-                    iters = 0
+                    per_disjunct = []
                     for q in dq.disjuncts:
                         plan = generate_plan(q, wl.graph, catalog)
-                        res = eng.run(plan, heuristic, seed=seed)
-                        loads += res.stats.loads
-                        l_ideal = max(l_ideal, res.stats.l_ideal)
-                        n_answers += res.stats.n_answers
-                        iters += res.stats.iterations
-                    stats.append(RunStats(
-                        query=f"{wl.name}:{dq.name}", scheme=scheme,
-                        heuristic=heuristic, loads=loads, l_ideal=l_ideal,
-                        n_answers=n_answers, iterations=iters))
+                        per_disjunct.append(
+                            eng.run(plan, heuristic, seed=seed).stats)
+                    stats.append(aggregate_disjuncts(
+                        per_disjunct, f"{wl.name}:{dq.name}", scheme,
+                        heuristic))
     return SweepResult(stats=stats, total_cc=total_cc,
                        wall_s=time.time() - t0)
+
+
+BUDGET_KS = (1, 10, 100, None)   # None = exhaustive ("K = inf")
+
+
+@dataclasses.dataclass
+class BudgetSweepResult:
+    """OPAT answer-budget runs: the response-time-vs-K raw data."""
+
+    stats: List[RunStats]     # answers_requested / loads_saved_vs_full set
+    wall_s: float
+
+
+def run_budget_sweep(workloads: Sequence[Workload],
+                     scheme: str = "kway_shem",
+                     heuristics: Sequence[str] = BUDGET_HEURISTICS,
+                     ks: Sequence[Optional[int]] = BUDGET_KS,
+                     seed: int = 0, cap: int = 32768,
+                     k_partitions: int = K_PARTITIONS) -> BudgetSweepResult:
+    """Run every query at each answer budget K through OPAT's runner API
+    and record how many partition loads the budget saved vs the exhaustive
+    run (the paper's "specified number of answers" mode, Sec. 1/5)."""
+    t0 = time.time()
+    stats: List[RunStats] = []
+    for wl in workloads:
+        catalog = build_catalog(wl.graph)
+        assign = partition_graph(wl.graph, k_partitions, scheme, seed=seed)
+        pg = build_partitions(wl.graph, assign, k_partitions)
+        eng = OPATEngine(pg, EngineConfig(cap=cap))
+        for dq in wl.dqueries:
+            plans = {q.name: generate_plan(q, wl.graph, catalog)
+                     for q in dq.disjuncts}
+            for heuristic in heuristics:
+                # exhaustive baseline per (query, heuristic); reused verbatim
+                # for the K=None entry (same deterministic RunRequest)
+                full_reports = {}
+                for q in dq.disjuncts:
+                    full_reports[q.name] = eng.run_request(RunRequest(
+                        plan=plans[q.name], heuristic=heuristic, seed=seed))
+                for kk in ks:
+                    per_disjunct = []
+                    saved = 0
+                    for q in dq.disjuncts:
+                        # reuse the baseline whenever the budget cannot bind:
+                        # K=None, or K strictly above the total answer count
+                        # (at K == total the budgeted run may stop earlier
+                        # than exhaustion, so it must execute for real)
+                        if (kk is None
+                                or full_reports[q.name].stats.n_answers < kk):
+                            rep = full_reports[q.name]
+                        else:
+                            rep = eng.run_request(RunRequest(
+                                plan=plans[q.name], heuristic=heuristic,
+                                max_answers=kk, seed=seed))
+                        per_disjunct.append(rep.stats)
+                        saved += (full_reports[q.name].stats.n_loads
+                                  - rep.stats.n_loads)
+                    stats.append(aggregate_disjuncts(
+                        per_disjunct, f"{wl.name}:{dq.name}", scheme,
+                        heuristic, answers_requested=kk,
+                        loads_saved_vs_full=saved))
+    return BudgetSweepResult(stats=stats, wall_s=time.time() - t0)
 
 
 def fmt_table(rows: List[List[str]], header: List[str]) -> str:

@@ -22,9 +22,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from .common import (ALL_HEURISTICS, MAX_SN, MIN_SN, RANDOM_SN, SCHEMES,
-                     SweepResult, fmt_table,
-                     avg_load_ratio_across_schemes,
+from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN,
+                     RANDOM_SN, SCHEMES, BudgetSweepResult, SweepResult,
+                     fmt_table, avg_load_ratio_across_schemes,
                      avg_load_ratio_for_batch)
 
 
@@ -76,6 +76,44 @@ def table5(sweep: SweepResult, out_dir: str) -> str:
     header = ["workload", "heuristic", "MIN-CC scheme", "ratio@MIN-CC",
               "MAX-CC scheme", "ratio@MAX-CC"]
     _csv(os.path.join(out_dir, "table5.csv"), header, rows)
+    return fmt_table(rows, header)
+
+
+def table_k_budget(budget: BudgetSweepResult, out_dir: str) -> str:
+    """Response-time vs K: per (query, heuristic, K) — partition loads,
+    loads saved vs the exhaustive run, and answers returned.  Loads are
+    the response-time proxy (each load = one partition residency, the
+    paper's cost unit); the "saved" column is what the answer budget buys,
+    and MAX-YIELD vs MAX-SN/MIN-SN shows the budget-aware heuristic's
+    edge at small K."""
+    def k_label(k):
+        return "inf" if k is None else str(k)
+
+    queries = sorted({s.query for s in budget.stats})
+    # derive from the data (BUDGET_HEURISTICS order first, then any extras)
+    present = {s.heuristic for s in budget.stats}
+    heuristics = ([h for h in BUDGET_HEURISTICS if h in present]
+                  + sorted(present - set(BUDGET_HEURISTICS)))
+    ks = sorted({s.answers_requested for s in budget.stats},
+                key=lambda k: (k is None, k))
+    rows = []
+    for q in queries:
+        for h in heuristics:
+            row = [q, h.upper()]
+            for kk in ks:
+                sub = [s for s in budget.stats
+                       if s.query == q and s.heuristic == h
+                       and s.answers_requested == kk]
+                if sub:
+                    s = sub[0]
+                    row.append(f"{s.n_loads}(-{s.loads_saved_vs_full})"
+                               f"/{s.n_answers}a")
+                else:
+                    row.append("-")
+            rows.append(row)
+    header = ["query", "heuristic"] + [f"K={k_label(k)} loads(-saved)/ans"
+                                       for k in ks]
+    _csv(os.path.join(out_dir, "table_k_budget.csv"), header, rows)
     return fmt_table(rows, header)
 
 

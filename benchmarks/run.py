@@ -30,7 +30,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import mp_scaling, paper_tables, roofline
-    from .common import build_workloads, run_sweep
+    from .common import build_workloads, run_budget_sweep, run_sweep
 
     if not args.skip_sweep:
         scale = 600.0 if args.paper_scale else args.scale
@@ -63,6 +63,11 @@ def main() -> None:
             print("paper-claim validation: all qualitative claims hold "
                   "(MAX-SN >= MIN-SN >= RANDOM; IMDB MAX==MIN; MIN-CC >= "
                   "MAX-CC)\n")
+
+        print("== Response time vs K (answer budget, OPAT runner API) ==")
+        budget = run_budget_sweep(workloads, seed=args.seed)
+        print(f"   {len(budget.stats)} budget runs in {budget.wall_s:.1f}s")
+        print(paper_tables.table_k_budget(budget, args.out), "\n")
 
         print("== TraditionalMP / MapReduceMP scaling (Sec. 8-9) ==")
         print(mp_scaling.run(args.out, scale=args.scale, seed=args.seed), "\n")

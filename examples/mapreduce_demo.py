@@ -24,8 +24,8 @@ k = 4
 assign = partition_graph(graph, k, "ecosocial")
 pg = build_partitions(graph, assign, k)
 catalog = build_catalog(graph)
-mesh = jax.make_mesh((k,), ("part",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_part_mesh
+mesh = make_part_mesh(k)
 print(f"graph {graph.n_nodes}/{graph.n_edges}; {k} partitions on "
       f"{jax.device_count()} devices")
 

@@ -8,9 +8,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (EngineConfig, MAX_SN, OPATEngine, build_catalog,
-                        build_partitions, generate_plan, match_query,
-                        partition_graph)
+from repro.core import (EngineConfig, MAX_SN, OPATEngine, RunRequest,
+                        build_catalog, build_partitions, generate_plan,
+                        match_query, partition_graph)
 from repro.core.query import Query, QueryEdge, QueryNode
 from repro.data.generators import imdb_like_graph
 
@@ -52,3 +52,12 @@ print(f"answers: {res.answers.shape[0]}; partition loads {res.stats.loads} "
 ref = match_query(graph, query, q_pad=8)
 assert np.array_equal(np.unique(res.answers, axis=0), ref)
 print("oracle check: MATCH")
+
+# 6. answer budget: ask for the FIRST answer only ("all or specified number
+#    of answers") — the engine stops loading partitions as soon as one
+#    unique answer exists, which is the low-response-time serving mode
+rep = engine.run_request(RunRequest(plan=plan, heuristic=MAX_SN,
+                                    max_answers=1))
+print(f"top-1: {rep.answers.shape[0]} answer in {rep.stats.n_loads} loads "
+      f"(full run took {res.stats.n_loads})")
+assert tuple(rep.answers[0]) in {tuple(r) for r in ref}

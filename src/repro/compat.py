@@ -1,0 +1,65 @@
+"""Version-tolerance shims for jax API drift.
+
+The repo targets the newest jax idioms (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``), but containers and
+CI images often pin older 0.4.x releases where those live under
+``jax.experimental.shard_map`` (kwarg ``check_rep``) and ``make_mesh`` has
+no ``axis_types`` parameter.  Every mesh/shard_map construction in the
+repo goes through this module so a jax upgrade is a one-file audit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["shard_map", "make_mesh", "make_part_mesh", "axis_size"]
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` is new; on older jax ``psum(1, axis)`` constant-
+    folds to the same static int.
+    """
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` when available, else the experimental fallback.
+
+    ``check_vma`` (new name) and ``check_rep`` (old name) toggle the same
+    replication check; callers always use the new name.
+    """
+    import jax
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported;
+    plain ``jax.sharding.Mesh`` on jax < 0.4.35 (no ``jax.make_mesh``)."""
+    import jax
+    import numpy as np
+    if not hasattr(jax, "make_mesh"):
+        n = int(np.prod(tuple(shape)))
+        devs = list(devices) if devices is not None else jax.devices()[:n]
+        return jax.sharding.Mesh(
+            np.asarray(devs).reshape(tuple(shape)), tuple(axes))
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def make_part_mesh(k: int):
+    """The 1-D ``("part",)`` mesh MapReduceMP uses: one device per partition."""
+    return make_mesh((k,), ("part",))

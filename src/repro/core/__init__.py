@@ -7,14 +7,17 @@ Public API:
   build_catalog / generate_plan        — cost-based planning
   Query / DisjunctiveQuery / make_*    — query construction
   OPATEngine / TraditionalMPEngine / MapReduceMPEngine
+  RunRequest / RunReport / QueryRunner — unified runner protocol with
+                                         answer budgets (core/runner.py)
   oracle.match_query                   — whole-graph ground truth
 """
 from .catalog import Catalog, build_catalog
 from .engine import EngineConfig, make_partition_evaluator
 from .graph import (Graph, GraphBuilder, LabelVocab, PartitionArrays,
                     PartitionedGraph, WILDCARD, build_partitions)
-from .heuristics import (ALL_HEURISTICS, MAX_SN, MIN_SN, RANDOM_SN,
-                         choose_partition, choose_top_p, rank_partitions)
+from .heuristics import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MAX_YIELD,
+                         MIN_SN, RANDOM_SN, choose_partition, choose_top_p,
+                         rank_partitions)
 from .metrics import (RunStats, avg_load_ratio_across_schemes,
                       avg_load_ratio_for_batch, l_ideal_for_plan,
                       total_connected_components)
@@ -24,6 +27,7 @@ from .partition import SCHEMES, PartitionScheme, partition_graph, partition_qual
 from .plan import Plan, PlanArrays, PlanStep, generate_plan
 from .query import (DisjunctiveQuery, Query, QueryEdge, QueryNode,
                     make_path_query, make_star_query)
+from .runner import QueryRunner, RunReport, RunRequest, truncate_answers
 from .state import BindingBatch, QueryState
 from .traditional_mp import TraditionalMPEngine, TraditionalMPResult
 
@@ -31,8 +35,9 @@ __all__ = [
     "Catalog", "build_catalog", "EngineConfig", "make_partition_evaluator",
     "Graph", "GraphBuilder", "LabelVocab", "PartitionArrays",
     "PartitionedGraph", "WILDCARD", "build_partitions",
-    "ALL_HEURISTICS", "MAX_SN", "MIN_SN", "RANDOM_SN",
-    "choose_partition", "choose_top_p", "rank_partitions",
+    "ALL_HEURISTICS", "BUDGET_HEURISTICS", "MAX_SN", "MAX_YIELD", "MIN_SN",
+    "RANDOM_SN", "choose_partition", "choose_top_p", "rank_partitions",
+    "QueryRunner", "RunReport", "RunRequest", "truncate_answers",
     "RunStats", "avg_load_ratio_across_schemes", "avg_load_ratio_for_batch",
     "l_ideal_for_plan", "total_connected_components",
     "OPATEngine", "OPATResult", "match_disjunctive", "match_query",

@@ -1,30 +1,46 @@
-"""Partition-choice heuristics (paper Sec. 5).
+"""Partition-choice heuristics (paper Sec. 5, plus a budget-aware one).
 
-MAX-SN  : load the eligible partition with the most start/continuation nodes
-          (greedy; the paper's best performer).
-MIN-SN  : load the eligible partition with the fewest, accumulating spanning
-          work into big-SN partitions hoping to process them once.
-RANDOM  : baseline — uniform choice among eligible partitions.
+MAX-SN   : load the eligible partition with the most start/continuation
+           nodes (greedy; the paper's best performer).
+MIN-SN   : load the eligible partition with the fewest, accumulating
+           spanning work into big-SN partitions hoping to process them once.
+RANDOM   : baseline — uniform choice among eligible partitions.
+MAX-YIELD: budget-aware (answer-budget runs, ``max_answers=K``): rank by
+           SNI count x the partition's *observed completion rate* — the
+           fraction of rows processed there so far that completed an
+           answer rather than spawning a continuation (Laplace-smoothed,
+           so unseen partitions score on SNI alone like MAX-SN).  Under a
+           small K this prefers partitions likely to FINISH answers over
+           ones that merely fan out spanning work; with no observations or
+           K=inf it degrades gracefully toward MAX-SN.
 
 Ties are resolved randomly, as in the paper.  The same functions order the
 top-p set for TraditionalMP / MapReduceMP (Sec. 8.1 line 4/13).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Mapping, Optional, Sequence
 
 import numpy as np
 
 MAX_SN = "max-sn"
 MIN_SN = "min-sn"
 RANDOM_SN = "random-sn"
-ALL_HEURISTICS = (MAX_SN, MIN_SN, RANDOM_SN)
+MAX_YIELD = "max-yield"
+ALL_HEURISTICS = (MAX_SN, MIN_SN, RANDOM_SN)          # the paper's three
+BUDGET_HEURISTICS = (MAX_SN, MIN_SN, MAX_YIELD)       # the K-sweep set
 
 
 def rank_partitions(heuristic: str, eligible: Sequence[int],
-                    sni_counts: Sequence[int], rng: np.random.Generator
+                    sni_counts: Sequence[int], rng: np.random.Generator,
+                    completion_rates: Optional[Mapping[int, float]] = None,
                     ) -> List[int]:
-    """Return ``eligible`` ordered best-first under ``heuristic``."""
+    """Return ``eligible`` ordered best-first under ``heuristic``.
+
+    ``completion_rates`` maps pid -> observed completed/(completed+spawned)
+    rate in [0, 1]; only MAX-YIELD reads it (missing -> 0.5, the smoothed
+    no-information prior).
+    """
     elig = list(eligible)
     if not elig:
         return []
@@ -37,18 +53,31 @@ def rank_partitions(heuristic: str, eligible: Sequence[int],
         keys = list(zip(-counts, tie))
     elif heuristic == MIN_SN:
         keys = list(zip(counts, tie))
+    elif heuristic == MAX_YIELD:
+        rates = np.asarray(
+            [0.5 if completion_rates is None
+             else float(completion_rates.get(p, 0.5)) for p in elig])
+        # expected completions if loaded now ~ SNI x completion rate
+        keys = list(zip(-(counts * rates), tie))
     else:
         raise ValueError(f"unknown heuristic {heuristic!r}")
-    order = sorted(range(len(elig)), key=lambda i: (int(keys[i][0]), int(keys[i][1])))
+    order = sorted(range(len(elig)),
+                   key=lambda i: (float(keys[i][0]), int(keys[i][1])))
     return [elig[i] for i in order]
 
 
 def choose_partition(heuristic: str, eligible: Sequence[int],
-                     sni_counts: Sequence[int], rng: np.random.Generator) -> int:
-    return rank_partitions(heuristic, eligible, sni_counts, rng)[0]
+                     sni_counts: Sequence[int], rng: np.random.Generator,
+                     completion_rates: Optional[Mapping[int, float]] = None,
+                     ) -> int:
+    return rank_partitions(heuristic, eligible, sni_counts, rng,
+                           completion_rates)[0]
 
 
 def choose_top_p(heuristic: str, eligible: Sequence[int],
                  sni_counts: Sequence[int], p: int,
-                 rng: np.random.Generator) -> List[int]:
-    return rank_partitions(heuristic, eligible, sni_counts, rng)[:p]
+                 rng: np.random.Generator,
+                 completion_rates: Optional[Mapping[int, float]] = None,
+                 ) -> List[int]:
+    return rank_partitions(heuristic, eligible, sni_counts, rng,
+                           completion_rates)[:p]

@@ -18,6 +18,9 @@ The whole query runs as ONE compiled program: iterations are a
 ``lax.while_loop`` whose condition is a global psum — there is no host
 round-trip between iterations, which is the beyond-paper response-time win
 (the paper's Hadoop incarnation pays a full job launch per iteration).
+The same condition also carries the answer budget ("all or specified
+number of answers", Sec. 1): a psum of per-mapper FAA counts reaching
+``max_answers`` exits the compiled program early on-device.
 
 Backpressure: rows whose destination quota is full simply stay in the local
 buffer and are re-offered next iteration — deadlock-free because delivered
@@ -39,12 +42,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .engine import EngineConfig, _match_tile
 from .graph import PartitionedGraph, WILDCARD
-from .heuristics import MAX_SN, MIN_SN, RANDOM_SN
+from .heuristics import MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN
 from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
+from .runner import RunReport, RunRequest, truncate_answers
 from .state import apply_value_op
+
+# "no budget" sentinel for the on-device answer-count stop test
+_NO_BUDGET = np.int32(2**31 - 1)
 
 
 @dataclasses.dataclass
@@ -55,7 +63,10 @@ class MapReduceMPResult:
 
 
 def _heuristic_id(h: str) -> int:
-    return {MAX_SN: 0, MIN_SN: 1, RANDOM_SN: 2}[h]
+    # MAX-YIELD needs host-observed completion rates which the single
+    # compiled program never surfaces; on-device it degrades to MAX-SN
+    # (its no-information behaviour — see heuristics.py).
+    return {MAX_SN: 0, MIN_SN: 1, RANDOM_SN: 2, MAX_YIELD: 0}[h]
 
 
 class MapReduceMPEngine:
@@ -78,6 +89,12 @@ class MapReduceMPEngine:
         assert len(mesh.axis_names) == 1, "use a 1-D 'part' mesh"
         self.quota = quota_per_dest or max(8, self.cfg.cap // (4 * self.P))
         self.m_limit = m_limit if m_limit is not None else self.P
+        if heuristic == MAX_YIELD:
+            import warnings
+            warnings.warn(
+                "MapReduceMP has no host loop to observe completion rates; "
+                "MAX-YIELD degrades to MAX-SN on-device — reported numbers "
+                "are MAX-SN numbers", stacklevel=2)
         self.heuristic = heuristic
         self.max_outer_iters = max_outer_iters
         self._compiled = None
@@ -125,7 +142,7 @@ class MapReduceMPEngine:
             live = valid & (step < n_steps)
             return live & local, live & ~local, lidx, fg
 
-        def device_fn(part, g2l_row, owner, plan, n_steps, rngseed):
+        def device_fn(part, g2l_row, owner, plan, n_steps, rngseed, budget):
             # per-device state; partition id == device index on `axis`
             my = jax.lax.axis_index(axis)
             n_core = part["n_core"][0]
@@ -168,7 +185,12 @@ class MapReduceMPEngine:
                 rows, step, valid, faa, faa_n, ovf, it = st
                 live = (valid & (step < n_steps)).sum(dtype=jnp.int32)
                 total = jax.lax.psum(live, axis)
-                return (total > 0) & (it < self.max_outer_iters)
+                # answer-budget stop: the jobtracker's global answer count
+                # (psum of per-mapper FAA sizes) reaching K ends the single
+                # compiled program early — no host round-trip (Sec. 9 +
+                # runner.py budget semantics)
+                got = jax.lax.psum(faa_n, axis)
+                return (total > 0) & (got < budget) & (it < self.max_outer_iters)
 
             def body(st):
                 rows, step, valid, faa, faa_n, ovf, it = st
@@ -282,7 +304,11 @@ class MapReduceMPEngine:
             st = (rows, step, valid, faa, faa_n, overflow, jnp.int32(0))
             rows, step, valid, faa, faa_n, overflow, iters = \
                 jax.lax.while_loop(cond, body, st)
-            return (faa[None], faa_n[None], overflow[None], iters[None])
+            # did the loop end because the work drained (vs budget/iter cap)?
+            live_end = (valid & (step < n_steps)).sum(dtype=jnp.int32)
+            exhausted = jax.lax.psum(live_end, axis) == 0
+            return (faa[None], faa_n[None], overflow[None], iters[None],
+                    exhausted[None])
 
         pspec = P(axis)
         in_specs = (
@@ -292,33 +318,74 @@ class MapReduceMPEngine:
             P(),                                # plan replicated
             P(),                                # n_steps
             P(),                                # rng seed
+            P(),                                # answer budget (replicated)
         )
-        out_specs = (pspec, pspec, pspec, pspec)
-        fn = jax.shard_map(device_fn, mesh=self.mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        out_specs = (pspec, pspec, pspec, pspec, pspec)
+        fn = shard_map(device_fn, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
         return jax.jit(fn)
 
-    def run(self, plan: Plan, seed: int = 0) -> MapReduceMPResult:
+    def run(self, plan: Plan, seed: int = 0,
+            max_answers: Optional[int] = None) -> MapReduceMPResult:
         cfg = self.cfg
         assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
         if self._compiled is None:
             self._compiled = self._build(cfg.s_pad)
         plan_arrays = PlanArrays.from_plan(plan, pad_steps=cfg.s_pad)
-        faa, faa_n, overflow, iters = self._compiled(
-            self.stacked, self.g2l, self.owner, plan_arrays,
-            np.int32(plan.n_steps), np.int32(seed))
-        faa = np.asarray(faa)
-        faa_n = np.asarray(faa_n)
-        if bool(np.asarray(overflow).any()):
-            raise RuntimeError("MapReduceMP buffer overflow; raise cap/quota")
-        rows = [faa[p, : faa_n[p]] for p in range(self.P) if faa_n[p]]
-        answers = (np.unique(np.concatenate(rows), axis=0) if rows
-                   else np.zeros((0, cfg.q_pad), dtype=np.int32))
+        # The device-side stop counts raw FAA appends, which may include
+        # duplicate rows (two distinct expansion paths converging on the
+        # same binding).  If dedup leaves us short of K while the program
+        # stopped on the budget (not on exhaustion), re-run with a doubled
+        # device budget — geometric, so at most ~log2(dupes) extra runs,
+        # and none at all on duplicate-free workloads.
+        dev_budget = (int(_NO_BUDGET) if max_answers is None
+                      else int(max_answers))
+        while True:
+            faa, faa_n, overflow, iters, exhausted = self._compiled(
+                self.stacked, self.g2l, self.owner, plan_arrays,
+                np.int32(plan.n_steps), np.int32(seed),
+                np.int32(min(dev_budget, int(_NO_BUDGET))))
+            faa = np.asarray(faa)
+            faa_n = np.asarray(faa_n)
+            if bool(np.asarray(overflow).any()):
+                raise RuntimeError(
+                    "MapReduceMP buffer overflow; raise cap/quota")
+            rows = [faa[p, : faa_n[p]] for p in range(self.P) if faa_n[p]]
+            answers = (np.unique(np.concatenate(rows), axis=0) if rows
+                       else np.zeros((0, cfg.q_pad), dtype=np.int32))
+            if (max_answers is None
+                    or answers.shape[0] >= max_answers
+                    or bool(np.asarray(exhausted).all())  # total < K: no more
+                    # iteration-cap stop: re-running the same deterministic
+                    # program can only reproduce the same short answer set
+                    or int(np.asarray(iters).max()) >= self.max_outer_iters
+                    or dev_budget >= int(_NO_BUDGET)):
+                break
+            dev_budget *= 2
+        answers = truncate_answers(answers, max_answers)
         n_iter = int(np.asarray(iters).max())
         stats = RunStats(query=plan.query.name, scheme="?",
                          heuristic=self.heuristic,
                          loads=[], l_ideal=l_ideal_for_plan(self.pg, plan),
                          n_answers=int(answers.shape[0]),
-                         iterations=n_iter)
+                         iterations=n_iter,
+                         answers_requested=max_answers)
         return MapReduceMPResult(answers=answers, stats=stats,
                                  n_iterations=n_iter)
+
+    def run_request(self, req: RunRequest) -> RunReport:
+        """The shared ``QueryRunner`` protocol (see core/runner.py).
+
+        The engine's heuristic is fixed at construction (it is baked into
+        the compiled program); a conflicting per-request heuristic is an
+        error rather than a silent ignore.
+        """
+        if req.heuristic != self.heuristic:
+            raise ValueError(
+                f"MapReduceMPEngine was compiled with heuristic "
+                f"{self.heuristic!r}; rebuild the engine to run "
+                f"{req.heuristic!r}")
+        res = self.run(req.plan, seed=req.seed, max_answers=req.max_answers)
+        return RunReport(answers=res.answers, stats=res.stats,
+                         engine="mapreduce",
+                         extra={"n_iterations": res.n_iterations})

@@ -16,7 +16,7 @@ required partition.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -35,6 +35,9 @@ class RunStats:
     l_ideal: int
     n_answers: int
     iterations: int = 0               # MP engines: #parallel iterations
+    answers_requested: Optional[int] = None   # K of an answer-budget run
+    loads_saved_vs_full: Optional[int] = None # full-run loads minus this
+                                              # run's (benchmark-filled)
 
     @property
     def n_loads(self) -> int:

@@ -21,9 +21,10 @@ import numpy as np
 
 from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
 from .graph import PartitionedGraph
-from .heuristics import choose_partition
+from .heuristics import MAX_YIELD, choose_partition
 from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
+from .runner import RunReport, RunRequest, truncate_answers
 from .state import BindingBatch, QueryState
 
 
@@ -75,8 +76,9 @@ class OPATEngine:
                     f"EngineConfig.cap (currently {cfg.cap})")
             cn = int(res.comp_n)
             if cn:
-                st.faa_rows.append(np.asarray(res.comp_rows)[:cn])
+                st.add_answers(np.asarray(res.comp_rows)[:cn])
             on = int(res.out_n)
+            st.observe_yield(pid, cn, on)
             if on:
                 out_rows = np.asarray(res.out_rows)[:on]
                 out_step = np.asarray(res.out_step)[:on]
@@ -89,7 +91,8 @@ class OPATEngine:
                         ).dedup()
 
     def run(self, plan: Plan, heuristic: str, seed: int = 0,
-            max_loads: Optional[int] = None) -> OPATResult:
+            max_loads: Optional[int] = None,
+            max_answers: Optional[int] = None) -> OPATResult:
         cfg = self.cfg
         assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
         rng = np.random.default_rng(seed)
@@ -97,10 +100,11 @@ class OPATEngine:
         counts = self.pg.start_label_counts(plan.start_label,
                                             plan.start_value_op,
                                             plan.start_value)
-        st = QueryState.initial(self.pg.k, cfg.q_pad, counts)
+        st = QueryState.initial(self.pg.k, cfg.q_pad, counts,
+                                track_answer_keys=max_answers is not None)
         limit = max_loads if max_loads is not None else 64 * self.pg.k
 
-        while True:
+        while not st.budget_met(max_answers):
             eligible = st.eligible()
             if not eligible:
                 break
@@ -108,7 +112,9 @@ class OPATEngine:
                 raise RuntimeError("OPAT exceeded max partition loads "
                                    f"({limit}); likely a routing bug")
             sni = {p: st.sni_count(p) for p in eligible}
-            pid = choose_partition(heuristic, eligible, sni, rng)
+            rates = (st.completion_rates() if heuristic == MAX_YIELD
+                     else None)
+            pid = choose_partition(heuristic, eligible, sni, rng, rates)
             st.loads.append(pid)
             st.iterations += 1
             batch = st.ima[pid]
@@ -118,9 +124,18 @@ class OPATEngine:
             self._run_partition(pid, plan_arrays, plan.n_steps, batch,
                                 seed_fresh, st)
 
+        answers = truncate_answers(st.unique_answers(), max_answers)
         stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
                          loads=list(st.loads),
                          l_ideal=l_ideal_for_plan(self.pg, plan),
-                         n_answers=int(st.unique_answers().shape[0]),
-                         iterations=st.iterations)
-        return OPATResult(answers=st.unique_answers(), stats=stats, state=st)
+                         n_answers=int(answers.shape[0]),
+                         iterations=st.iterations,
+                         answers_requested=max_answers)
+        return OPATResult(answers=answers, stats=stats, state=st)
+
+    def run_request(self, req: RunRequest) -> RunReport:
+        """The shared ``QueryRunner`` protocol (see core/runner.py)."""
+        res = self.run(req.plan, req.heuristic, seed=req.seed,
+                       max_answers=req.max_answers)
+        return RunReport(answers=res.answers, stats=res.stats, engine="opat",
+                         extra={"state": res.state})

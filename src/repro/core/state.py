@@ -117,15 +117,48 @@ class QueryState:
     faa_rows: List[np.ndarray]         # accumulated answers
     loads: List[int]                   # sequence of partition loads (metric)
     iterations: int = 0
+    # per-partition yield observations (MAX-YIELD heuristic): when partition
+    # p was processed, how many rows completed an answer vs spawned a
+    # continuation into another partition's IMA
+    completed_from: np.ndarray = None  # [k] int64
+    spawned_from: np.ndarray = None    # [k] int64
+    # incrementally-maintained unique answer keys, so the per-load budget
+    # check is O(new rows), not a full-FAA np.unique; engines must append
+    # answers via add_answers().  None (the default) skips the bookkeeping
+    # entirely — exhaustive runs never consult budget_met, so they should
+    # not pay the tuple-hashing/memory cost.
+    answer_keys: Optional[set] = None
 
     @staticmethod
-    def initial(k: int, q_pad: int, fresh_counts: np.ndarray) -> "QueryState":
+    def initial(k: int, q_pad: int, fresh_counts: np.ndarray,
+                track_answer_keys: bool = False) -> "QueryState":
         return QueryState(
             k=k, q_pad=q_pad,
             ima=[BindingBatch.empty(q_pad) for _ in range(k)],
             fresh_pending=fresh_counts > 0,
             fresh_counts=fresh_counts.astype(np.int64).copy(),
-            faa_rows=[], loads=[], iterations=0)
+            faa_rows=[], loads=[], iterations=0,
+            completed_from=np.zeros(k, dtype=np.int64),
+            spawned_from=np.zeros(k, dtype=np.int64),
+            answer_keys=set() if track_answer_keys else None)
+
+    def add_answers(self, rows: np.ndarray) -> None:
+        """Append completed rows to the FAA (and the unique-key index when
+        an answer budget is being tracked)."""
+        self.faa_rows.append(rows)
+        if self.answer_keys is not None:
+            self.answer_keys.update(map(tuple, rows.tolist()))
+
+    def observe_yield(self, pid: int, completed: int, spawned: int) -> None:
+        self.completed_from[pid] += completed
+        self.spawned_from[pid] += spawned
+
+    def completion_rates(self) -> dict:
+        """Laplace-smoothed completed/(completed+spawned) per partition —
+        the MAX-YIELD signal (0.5 prior when nothing was observed yet)."""
+        return {p: (float(self.completed_from[p]) + 1.0)
+                   / (float(self.completed_from[p] + self.spawned_from[p]) + 2.0)
+                for p in range(self.k)}
 
     def sni_count(self, pid: int) -> int:
         """The SNI-derived score used by the SN heuristics: fresh start nodes
@@ -148,3 +181,14 @@ class QueryState:
         if a.shape[0] == 0:
             return a
         return np.unique(a, axis=0)
+
+    def unique_answer_count(self) -> int:
+        if self.answer_keys is not None:
+            return len(self.answer_keys)
+        return int(self.unique_answers().shape[0])
+
+    def budget_met(self, max_answers) -> bool:
+        """True when an answer budget is set and the FAA already holds that
+        many unique answers (the engines' early-termination test)."""
+        return (max_answers is not None
+                and self.unique_answer_count() >= max_answers)

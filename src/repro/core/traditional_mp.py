@@ -20,9 +20,10 @@ import numpy as np
 
 from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
 from .graph import PartitionedGraph
-from .heuristics import choose_top_p
+from .heuristics import MAX_YIELD, choose_top_p
 from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
+from .runner import RunReport, RunRequest, truncate_answers
 from .state import BindingBatch, QueryState
 
 
@@ -53,7 +54,8 @@ class TraditionalMPEngine:
         return {k: np.stack([self._parts[p][k] for p in pids]) for k in keys}
 
     def run(self, plan: Plan, heuristic: str, seed: int = 0,
-            max_iterations: Optional[int] = None) -> TraditionalMPResult:
+            max_iterations: Optional[int] = None,
+            max_answers: Optional[int] = None) -> TraditionalMPResult:
         cfg = self.cfg
         assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
         rng = np.random.default_rng(seed)
@@ -61,18 +63,23 @@ class TraditionalMPEngine:
         counts = self.pg.start_label_counts(plan.start_label,
                                             plan.start_value_op,
                                             plan.start_value)
-        st = QueryState.initial(self.pg.k, cfg.q_pad, counts)
+        st = QueryState.initial(self.pg.k, cfg.q_pad, counts,
+                                track_answer_keys=max_answers is not None)
         limit = max_iterations if max_iterations is not None else 64 * self.pg.k
         per_iter: List[List[int]] = []
 
-        while True:
+        # budget check after each top-p merge (and before the first load:
+        # a K=0 request does no work)
+        while not st.budget_met(max_answers):
             eligible = st.eligible()
             if not eligible:
                 break
             if st.iterations >= limit:
                 raise RuntimeError("TraditionalMP exceeded max iterations")
             sni = {p: st.sni_count(p) for p in eligible}
-            chosen = choose_top_p(heuristic, eligible, sni, self.p, rng)
+            rates = (st.completion_rates() if heuristic == MAX_YIELD
+                     else None)
+            chosen = choose_top_p(heuristic, eligible, sni, self.p, rng, rates)
             per_iter.append(list(chosen))
             st.iterations += 1
 
@@ -127,7 +134,8 @@ class TraditionalMPEngine:
                 if not is_real[i]:
                     continue
                 if comp_n[i]:
-                    st.faa_rows.append(comp_rows[i, : comp_n[i]])
+                    st.add_answers(comp_rows[i, : comp_n[i]])
+                st.observe_yield(exec_set[i], int(comp_n[i]), int(out_n[i]))
                 if out_n[i]:
                     orow = out_rows[i, : out_n[i]]
                     ostp = out_step[i, : out_n[i]]
@@ -139,10 +147,22 @@ class TraditionalMPEngine:
                                 BindingBatch(rows=orow[sel], step=ostp[sel])
                             ).dedup()
 
+        answers = truncate_answers(st.unique_answers(), max_answers)
         stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
                          loads=list(st.loads),
                          l_ideal=l_ideal_for_plan(self.pg, plan),
-                         n_answers=int(st.unique_answers().shape[0]),
-                         iterations=st.iterations)
-        return TraditionalMPResult(answers=st.unique_answers(), stats=stats,
+                         n_answers=int(answers.shape[0]),
+                         iterations=st.iterations,
+                         answers_requested=max_answers)
+        return TraditionalMPResult(answers=answers, stats=stats,
                                    state=st, partitions_per_iteration=per_iter)
+
+    def run_request(self, req: RunRequest) -> RunReport:
+        """The shared ``QueryRunner`` protocol (see core/runner.py)."""
+        res = self.run(req.plan, req.heuristic, seed=req.seed,
+                       max_answers=req.max_answers)
+        return RunReport(answers=res.answers, stats=res.stats,
+                         engine="traditional",
+                         extra={"state": res.state,
+                                "partitions_per_iteration":
+                                    res.partitions_per_iteration})

@@ -22,10 +22,11 @@ import time
 
 import numpy as np
 
-from repro.core import (EngineConfig, MAX_SN, MIN_SN, RANDOM_SN, OPATEngine,
-                        TraditionalMPEngine, build_catalog, build_partitions,
-                        generate_plan, match_query, partition_graph,
-                        partition_quality, total_connected_components)
+from repro.core import (EngineConfig, MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN,
+                        OPATEngine, RunRequest, TraditionalMPEngine,
+                        build_catalog, build_partitions, generate_plan,
+                        match_query, partition_graph, partition_quality,
+                        total_connected_components)
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)
 
@@ -53,9 +54,13 @@ def main() -> None:
     ap.add_argument("--engine", default="opat",
                     choices=["opat", "traditional", "mapreduce"])
     ap.add_argument("--heuristic", default=MAX_SN,
-                    choices=[MAX_SN, MIN_SN, RANDOM_SN])
+                    choices=[MAX_SN, MIN_SN, RANDOM_SN, MAX_YIELD])
     ap.add_argument("--processors", type=int, default=2,
                     help="p for TraditionalMP")
+    ap.add_argument("--max-answers", type=int, default=None,
+                    help="answer budget K per disjunct: stop after K unique "
+                         "answers (the paper's 'specified number of "
+                         "answers'; default: all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="check answers against the whole-graph oracle")
@@ -80,18 +85,19 @@ def main() -> None:
 
     if args.engine == "opat":
         engine = OPATEngine(pg, ecfg)
-        run = lambda plan: engine.run(plan, args.heuristic, seed=args.seed)
     elif args.engine == "traditional":
         engine = TraditionalMPEngine(pg, args.processors, ecfg)
-        run = lambda plan: engine.run(plan, args.heuristic, seed=args.seed)
     else:
-        import jax
+        from repro.compat import make_part_mesh
         from repro.core.mapreduce_mp import MapReduceMPEngine
-        mesh = jax.make_mesh(
-            (args.k,), ("part",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_part_mesh(args.k)
         engine = MapReduceMPEngine(pg, mesh, ecfg, heuristic=args.heuristic)
-        run = lambda plan: engine.run(plan, seed=args.seed)
+
+    # all three engines speak the QueryRunner protocol (core/runner.py)
+    def run(plan):
+        return engine.run_request(RunRequest(
+            plan=plan, heuristic=args.heuristic,
+            max_answers=args.max_answers, seed=args.seed))
 
     report = []
     for dq in dqueries:
@@ -119,9 +125,19 @@ def main() -> None:
         if args.verify:
             from repro.core.oracle import match_disjunctive
             ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
-            match = (answers.shape[0] == ref.shape[0]
-                     and (answers.shape[0] == 0
-                          or np.array_equal(np.unique(answers, axis=0), ref)))
+            if args.max_answers is None:
+                match = (answers.shape[0] == ref.shape[0]
+                         and (answers.shape[0] == 0
+                              or np.array_equal(np.unique(answers, axis=0),
+                                                ref)))
+            else:
+                # budgeted run: every returned row must be a real answer,
+                # and each disjunct returning min(K, total_d) rows means
+                # the union can never fall below min(K, ref_total)
+                refset = {tuple(r) for r in ref}
+                match = (all(tuple(r) in refset for r in answers)
+                         and answers.shape[0] >= min(args.max_answers,
+                                                     ref.shape[0]))
             rec["oracle_match"] = bool(match)
             print(f"        oracle: {ref.shape[0]} answers "
                   f"{'MATCH' if match else 'MISMATCH'}")

@@ -22,8 +22,8 @@ SCRIPT = textwrap.dedent("""
     assign = partition_graph(g, 4, "kway_shem")
     pg = build_partitions(g, assign, 4)
     cat = build_catalog(g)
-    mesh = jax.make_mesh((4,), ("part",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_part_mesh
+    mesh = make_part_mesh(4)
 
     for m_limit, heur in [(4, MAX_SN), (2, MAX_SN), (2, MIN_SN)]:
         eng = MapReduceMPEngine(pg, mesh, EngineConfig(cap=16384),
@@ -37,6 +37,19 @@ SCRIPT = textwrap.dedent("""
             assert got.shape == ref.shape and np.array_equal(got, ref), (
                 q.name, m_limit, heur, got.shape, ref.shape)
             assert res.n_iterations >= plan.max_path_len()
+
+    # answer budget across 4 devices: the global-psum stop condition must
+    # return exactly min(K, total) rows from the full answer set
+    eng = MapReduceMPEngine(pg, mesh, EngineConfig(cap=16384))
+    for dq in subgen_queries(g):
+        q = dq.disjuncts[0]
+        plan = generate_plan(q, g, cat)
+        ref = match_query(g, q, q_pad=8)
+        refset = {tuple(r) for r in ref}
+        for K in (1, 5):
+            res = eng.run(plan, max_answers=K)
+            assert res.answers.shape[0] == min(K, ref.shape[0]), (q.name, K)
+            assert all(tuple(r) in refset for r in res.answers), (q.name, K)
     print("MAPREDUCE_MULTIDEV_OK")
 """)
 

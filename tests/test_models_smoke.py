@@ -1,8 +1,13 @@
 """Per-architecture smoke tests (assignment requirement): instantiate a
 REDUCED config of the same family and run one forward/train step on CPU,
-asserting output shapes + no NaNs; plus prefill/decode consistency."""
+asserting output shapes + no NaNs; plus prefill/decode consistency.
+
+XLA-compile-heavy (whole-model jit per arch), so the module is marked
+``slow``: it dominates suite wall time and belongs to the CI full lane."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 import jax
 import jax.numpy as jnp

@@ -43,6 +43,7 @@ def test_mlstm_chunkwise_exact(mlstm_setup, T):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_mlstm_chunkwise_grads(mlstm_setup):
     params, x, H = mlstm_setup
     def loss(p, chunk):
@@ -61,6 +62,7 @@ def test_mlstm_chunk_nondivisible_falls_back(mlstm_setup):
     np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
 
 
+@pytest.mark.slow
 def test_slstm_remat_chunk_exact():
     rng = np.random.default_rng(1)
     B, S, d, H = 2, 64, 32, 4

@@ -8,6 +8,10 @@ plan well-formedness under the same generators.
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (EngineConfig, MAX_SN, MIN_SN, RANDOM_SN, OPATEngine,
