@@ -1,5 +1,11 @@
 """Shared benchmark harness: run (dataset x scheme x heuristic x query)
-sweeps through OPAT and collect the paper's RunStats.
+sweeps and collect the paper's RunStats.
+
+Each (workload, scheme) pair opens one ``GraphSession`` (core/session.py)
+and serves every query/heuristic through it — the paper's serving shape:
+one engine compile, partitions staged into the session's ``PartitionStore``
+once (cold) and reused across the batch (warm), with per-run RunStats
+carrying the scheme name and the cold/warm split.
 
 Scales: ``--paper-scale`` regenerates the paper's sizes (IMDB 1750K/5100K,
 synthetic 400K/1200K); default sizes finish on a laptop CPU in minutes and
@@ -18,11 +24,9 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import (ALL_HEURISTICS, BUDGET_HEURISTICS, EngineConfig,
-                        MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN, OPATEngine,
-                        RunRequest, RunStats, SCHEMES,
-                        avg_load_ratio_across_schemes,
+                        GraphSession, MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN,
+                        RunStats, SCHEMES, avg_load_ratio_across_schemes,
                         avg_load_ratio_for_batch, build_catalog,
-                        build_partitions, generate_plan, partition_graph,
                         total_connected_components)
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)
@@ -69,9 +73,16 @@ def aggregate_disjuncts(per_disjunct: Sequence[RunStats], query: str,
         l_ideal = max(l_ideal, s.l_ideal)
         n_answers += s.n_answers
         iters += s.iterations
+
+    def _fold(field):  # sum the store counters when every disjunct has them
+        vals = [getattr(s, field) for s in per_disjunct]
+        return sum(vals) if all(v is not None for v in vals) else None
+
     return RunStats(query=query, scheme=scheme, heuristic=heuristic,
                     loads=loads, l_ideal=l_ideal, n_answers=n_answers,
-                    iterations=iters, **extra)
+                    iterations=iters, cold_loads=_fold("cold_loads"),
+                    warm_loads=_fold("warm_loads"),
+                    prefetch_hits=_fold("prefetch_hits"), **extra)
 
 
 def run_sweep(workloads: Sequence[Workload],
@@ -85,19 +96,15 @@ def run_sweep(workloads: Sequence[Workload],
     for wl in workloads:
         catalog = build_catalog(wl.graph)
         for scheme in schemes:
-            assign = partition_graph(wl.graph, k, scheme, seed=seed)
-            pg = build_partitions(wl.graph, assign, k)
-            total_cc[(wl.name, scheme)] = total_connected_components(pg)
-            eng = OPATEngine(pg, EngineConfig(cap=cap))
+            sess = GraphSession(wl.graph, k=k, scheme=scheme, engine="opat",
+                                config=EngineConfig(cap=cap), seed=seed,
+                                catalog=catalog)
+            total_cc[(wl.name, scheme)] = total_connected_components(sess.pg)
             for dq in wl.dqueries:
                 for heuristic in heuristics:
-                    per_disjunct = []
-                    for q in dq.disjuncts:
-                        plan = generate_plan(q, wl.graph, catalog)
-                        per_disjunct.append(
-                            eng.run(plan, heuristic, seed=seed).stats)
+                    res = sess.submit(dq, heuristic=heuristic)
                     stats.append(aggregate_disjuncts(
-                        per_disjunct, f"{wl.name}:{dq.name}", scheme,
+                        res.stats, f"{wl.name}:{dq.name}", scheme,
                         heuristic))
     return SweepResult(stats=stats, total_cc=total_cc,
                        wall_s=time.time() - t0)
@@ -120,44 +127,37 @@ def run_budget_sweep(workloads: Sequence[Workload],
                      ks: Sequence[Optional[int]] = BUDGET_KS,
                      seed: int = 0, cap: int = 32768,
                      k_partitions: int = K_PARTITIONS) -> BudgetSweepResult:
-    """Run every query at each answer budget K through OPAT's runner API
-    and record how many partition loads the budget saved vs the exhaustive
-    run (the paper's "specified number of answers" mode, Sec. 1/5)."""
+    """Run every query at each answer budget K through one warm
+    ``GraphSession`` and record how many partition loads the budget saved
+    vs the exhaustive run (the paper's "specified number of answers" mode,
+    Sec. 1/5)."""
     t0 = time.time()
     stats: List[RunStats] = []
     for wl in workloads:
-        catalog = build_catalog(wl.graph)
-        assign = partition_graph(wl.graph, k_partitions, scheme, seed=seed)
-        pg = build_partitions(wl.graph, assign, k_partitions)
-        eng = OPATEngine(pg, EngineConfig(cap=cap))
+        sess = GraphSession(wl.graph, k=k_partitions, scheme=scheme,
+                            engine="opat", config=EngineConfig(cap=cap),
+                            seed=seed)
         for dq in wl.dqueries:
-            plans = {q.name: generate_plan(q, wl.graph, catalog)
-                     for q in dq.disjuncts}
             for heuristic in heuristics:
-                # exhaustive baseline per (query, heuristic); reused verbatim
-                # for the K=None entry (same deterministic RunRequest)
-                full_reports = {}
-                for q in dq.disjuncts:
-                    full_reports[q.name] = eng.run_request(RunRequest(
-                        plan=plans[q.name], heuristic=heuristic, seed=seed))
+                # exhaustive baseline per (query, heuristic); each disjunct's
+                # stats are reused verbatim whenever the budget cannot bind
+                # on it: K=None, or K strictly above its total answer count
+                # (at K == total the budgeted run may stop earlier than
+                # exhaustion, so it must execute for real — and a re-run
+                # would repeat the same deterministic load sequence anyway,
+                # contributing 0 to `saved`)
+                full = sess.submit(dq, heuristic=heuristic)
                 for kk in ks:
                     per_disjunct = []
-                    saved = 0
-                    for q in dq.disjuncts:
-                        # reuse the baseline whenever the budget cannot bind:
-                        # K=None, or K strictly above the total answer count
-                        # (at K == total the budgeted run may stop earlier
-                        # than exhaustion, so it must execute for real)
-                        if (kk is None
-                                or full_reports[q.name].stats.n_answers < kk):
-                            rep = full_reports[q.name]
+                    for q, fstat in zip(dq.disjuncts, full.stats):
+                        if kk is None or fstat.n_answers < kk:
+                            per_disjunct.append(fstat)
                         else:
-                            rep = eng.run_request(RunRequest(
-                                plan=plans[q.name], heuristic=heuristic,
-                                max_answers=kk, seed=seed))
-                        per_disjunct.append(rep.stats)
-                        saved += (full_reports[q.name].stats.n_loads
-                                  - rep.stats.n_loads)
+                            per_disjunct.append(sess.submit(
+                                q, max_answers=kk,
+                                heuristic=heuristic).stats[0])
+                    saved = sum(f.n_loads - r.n_loads
+                                for f, r in zip(full.stats, per_disjunct))
                     stats.append(aggregate_disjuncts(
                         per_disjunct, f"{wl.name}:{dq.name}", scheme,
                         heuristic, answers_requested=kk,

@@ -1,8 +1,11 @@
 """End-to-end driver (the paper's kind: query serving): batched queries on a
-partitioned graph with all three engines and the paper's metrics.
+partitioned graph with all three engines and the paper's metrics, served
+through one GraphSession (shared partition cache, cold/warm load split).
 
     PYTHONPATH=src python examples/serve_queries.py
     PYTHONPATH=src python examples/serve_queries.py --engine traditional -p 4
+    PYTHONPATH=src python examples/serve_queries.py --cache-parts 2 \
+        --max-answers 5 --json report.json
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/serve_queries.py --engine mapreduce
 

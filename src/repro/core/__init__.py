@@ -9,6 +9,12 @@ Public API:
   OPATEngine / TraditionalMPEngine / MapReduceMPEngine
   RunRequest / RunReport / QueryRunner — unified runner protocol with
                                          answer budgets (core/runner.py)
+  PartitionStore / LoadStats           — explicit partition residency: LRU
+                                         device cache + prefetch (core/store.py)
+  GraphSession / QueryResult           — stateful serving API: one session,
+                                         many queries, shared residency and
+                                         a per-partition workload profile
+                                         (core/session.py)
   oracle.match_query                   — whole-graph ground truth
 """
 from .catalog import Catalog, build_catalog
@@ -28,7 +34,9 @@ from .plan import Plan, PlanArrays, PlanStep, generate_plan
 from .query import (DisjunctiveQuery, Query, QueryEdge, QueryNode,
                     make_path_query, make_star_query)
 from .runner import QueryRunner, RunReport, RunRequest, truncate_answers
+from .session import GraphSession, QueryResult
 from .state import BindingBatch, QueryState
+from .store import LoadStats, PartitionStore, StoreEntry
 from .traditional_mp import TraditionalMPEngine, TraditionalMPResult
 
 __all__ = [
@@ -46,5 +54,7 @@ __all__ = [
     "DisjunctiveQuery", "Query", "QueryEdge", "QueryNode",
     "make_path_query", "make_star_query",
     "BindingBatch", "QueryState",
+    "LoadStats", "PartitionStore", "StoreEntry",
+    "GraphSession", "QueryResult",
     "TraditionalMPEngine", "TraditionalMPResult",
 ]

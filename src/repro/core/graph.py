@@ -239,6 +239,7 @@ class PartitionedGraph:
     cut_edges: int
     node_pad: int
     edge_pad: int
+    scheme: str = "?"                 # partitioning-scheme name (for RunStats)
 
     def start_label_counts(self, label_id: int, value_op: int = 0,
                            value: float = 0.0) -> np.ndarray:
@@ -298,12 +299,15 @@ def build_partitions(graph: Graph, assignment: np.ndarray, k: int,
                      edge_pad_multiple: int = 8,
                      uniform_pad: bool = True,
                      ell: bool = True,
-                     ell_width: Optional[int] = None) -> PartitionedGraph:
+                     ell_width: Optional[int] = None,
+                     scheme: str = "?") -> PartitionedGraph:
     """Materialize ``PartitionArrays`` for every partition from a vertex
     assignment, replicating the one-edge cut set (ghost nodes) per Fig. 1.
 
     All partitions are padded to a shared (node_pad, edge_pad) geometry when
     ``uniform_pad`` so a single jitted evaluator handles every partition.
+    ``scheme`` records the partitioning-scheme name that produced
+    ``assignment`` so every engine's ``RunStats`` can report it.
     """
     V = graph.n_nodes
     assignment = assignment.astype(np.int32)
@@ -407,4 +411,5 @@ def build_partitions(graph: Graph, assignment: np.ndarray, k: int,
     return PartitionedGraph(graph=graph, k=k, assignment=assignment, parts=parts,
                             owner=assignment.copy(), g2l=g2l, cut_edges=cut,
                             node_pad=node_pad if uniform_pad else -1,
-                            edge_pad=edge_pad if uniform_pad else -1)
+                            edge_pad=edge_pad if uniform_pad else -1,
+                            scheme=scheme)

@@ -50,6 +50,7 @@ from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
 from .runner import RunReport, RunRequest, truncate_answers
 from .state import apply_value_op
+from .store import PartitionStore
 
 # "no budget" sentinel for the on-device answer-count stop test
 _NO_BUDGET = np.int32(2**31 - 1)
@@ -77,7 +78,8 @@ class MapReduceMPEngine:
                  quota_per_dest: Optional[int] = None,
                  m_limit: Optional[int] = None,
                  heuristic: str = MAX_SN,
-                 max_outer_iters: int = 4096):
+                 max_outer_iters: int = 4096,
+                 store: Optional[PartitionStore] = None):
         self.pg = pg
         self.mesh = mesh
         self.cfg = cfg or EngineConfig()
@@ -99,23 +101,13 @@ class MapReduceMPEngine:
         self.max_outer_iters = max_outer_iters
         self._compiled = None
 
-        # stack partitions [P, ...] (device d holds partition d)
-        parts = pg.parts
-        self.stacked = {
-            "pid": np.arange(self.P, dtype=np.int32),
-            "n_core": np.asarray([p.n_core for p in parts], dtype=np.int32),
-            "node_gid": np.stack([p.node_gid for p in parts]),
-            "node_label": np.stack([p.node_label for p in parts]),
-            "node_value": np.stack([p.node_value for p in parts]),
-            "ell_dst": np.stack([p.ell_dst for p in parts]),
-            "ell_label": np.stack([p.ell_label for p in parts]),
-            "ell_dir": np.stack([p.ell_dir for p in parts]),
-            "ell_dlab": np.stack([p.ell_dlab for p in parts]),
-            "ell_dval": np.stack([p.ell_dval for p in parts]),
-            "ell_dgid": np.stack([p.ell_dgid for p in parts]),
-        }
-        self.g2l = pg.g2l          # [P, V]
-        self.owner = pg.owner      # [V] replicated
+        # all partitions ship at once, one per device along the mesh axis:
+        # the job-start load in MapReduce terms.  The store stages the
+        # stacked [P, ...] bundle sharded so device d holds partition d;
+        # the first run is a cold load, later runs on the same store reuse
+        # the device-resident shards (a warm load).
+        self.store = store if store is not None else PartitionStore(pg)
+        self._part_sharding = NamedSharding(mesh, P(mesh.axis_names[0]))
 
     # -- the SPMD program ----------------------------------------------------
 
@@ -312,7 +304,7 @@ class MapReduceMPEngine:
 
         pspec = P(axis)
         in_specs = (
-            {k: pspec for k in self.stacked},   # partitions sharded by device
+            {k: pspec for k in self.store.part_keys},  # parts sharded by device
             pspec,                              # g2l rows
             P(),                                # owner replicated
             P(),                                # plan replicated
@@ -340,9 +332,12 @@ class MapReduceMPEngine:
         # and none at all on duplicate-free workloads.
         dev_budget = (int(_NO_BUDGET) if max_answers is None
                       else int(max_answers))
+        load0 = self.store.stats.copy()
+        entry = self.store.get_stacked(tuple(range(self.P)),
+                                       sharding=self._part_sharding)
         while True:
             faa, faa_n, overflow, iters, exhausted = self._compiled(
-                self.stacked, self.g2l, self.owner, plan_arrays,
+                entry.part, entry.g2l, self.store.owner, plan_arrays,
                 np.int32(plan.n_steps), np.int32(seed),
                 np.int32(min(dev_budget, int(_NO_BUDGET))))
             faa = np.asarray(faa)
@@ -364,12 +359,16 @@ class MapReduceMPEngine:
             dev_budget *= 2
         answers = truncate_answers(answers, max_answers)
         n_iter = int(np.asarray(iters).max())
-        stats = RunStats(query=plan.query.name, scheme="?",
+        delta = self.store.stats - load0
+        stats = RunStats(query=plan.query.name, scheme=self.pg.scheme,
                          heuristic=self.heuristic,
                          loads=[], l_ideal=l_ideal_for_plan(self.pg, plan),
                          n_answers=int(answers.shape[0]),
                          iterations=n_iter,
-                         answers_requested=max_answers)
+                         answers_requested=max_answers,
+                         cold_loads=delta.cold_loads,
+                         warm_loads=delta.warm_loads,
+                         prefetch_hits=delta.prefetch_hits)
         return MapReduceMPResult(answers=answers, stats=stats,
                                  n_iterations=n_iter)
 

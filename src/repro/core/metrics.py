@@ -38,6 +38,15 @@ class RunStats:
     answers_requested: Optional[int] = None   # K of an answer-budget run
     loads_saved_vs_full: Optional[int] = None # full-run loads minus this
                                               # run's (benchmark-filled)
+    # PartitionStore residency accounting for this run (core/store.py):
+    # a cold load paid a host->device transfer on the critical path, a warm
+    # load reused device-resident buffers, a prefetch hit was a transfer
+    # that overlapped the previous partition's evaluation.  None when the
+    # engine ran without a store (never, since PR 2 — kept Optional so
+    # hand-built RunStats in tests/benchmarks stay valid).
+    cold_loads: Optional[int] = None
+    warm_loads: Optional[int] = None
+    prefetch_hits: Optional[int] = None
 
     @property
     def n_loads(self) -> int:

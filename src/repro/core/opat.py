@@ -11,6 +11,15 @@ The host orchestrator mirrors the paper's PGQP loop exactly:
 
 Partition *loads* (including re-loads of the same partition, Fig. 4c) are
 recorded for the load-ratio metrics.
+
+Partition residency goes through a ``PartitionStore`` (core/store.py): a
+load is *cold* when the store must ``device_put`` the partition and *warm*
+when device buffers are reused — a re-load of an already-resident partition
+(Fig. 4c) costs bookkeeping, not a transfer.  While one partition
+evaluates, the engine prefetches the heuristic's runner-up so the next
+pick's transfer overlaps the current evaluation (ROADMAP item #1);
+``RunStats.cold_loads`` / ``warm_loads`` / ``prefetch_hits`` record the
+split.
 """
 from __future__ import annotations
 
@@ -19,13 +28,14 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
+from .engine import EngineConfig, make_partition_evaluator
 from .graph import PartitionedGraph
-from .heuristics import MAX_YIELD, choose_partition
+from .heuristics import MAX_YIELD, rank_partitions
 from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
 from .runner import RunReport, RunRequest, truncate_answers
 from .state import BindingBatch, QueryState
+from .store import PartitionStore, StoreEntry
 
 
 @dataclasses.dataclass
@@ -36,21 +46,31 @@ class OPATResult:
 
 
 class OPATEngine:
-    """Reusable engine bound to one partitioned graph (one compile)."""
+    """Reusable engine bound to one partitioned graph (one compile).
 
-    def __init__(self, pg: PartitionedGraph, cfg: Optional[EngineConfig] = None):
+    ``store`` defaults to a private unbounded ``PartitionStore``; a
+    ``GraphSession`` passes its own so residency (and its hit/miss
+    accounting) is shared across queries.  ``prefetch`` stages the
+    heuristic's runner-up partition while the chosen one evaluates.
+    """
+
+    def __init__(self, pg: PartitionedGraph, cfg: Optional[EngineConfig] = None,
+                 store: Optional[PartitionStore] = None,
+                 prefetch: bool = True):
         self.pg = pg
         self.cfg = cfg or EngineConfig()
         assert pg.node_pad > 0, "build_partitions(uniform_pad=True) required"
         w = pg.parts[0].ell_width
         assert all(p.ell_width == w for p in pg.parts), "uniform ELL width required"
         self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
-        self._parts = [part_to_device_dict(p) for p in pg.parts]
+        self.store = store if store is not None else PartitionStore(pg)
+        self.prefetch = prefetch
 
-    def _run_partition(self, pid: int, plan_arrays: PlanArrays,
+    def _run_partition(self, entry: StoreEntry, plan_arrays: PlanArrays,
                        n_steps: int, batch: BindingBatch, seed_fresh: bool,
                        st: QueryState) -> None:
         cfg = self.cfg
+        pid = int(entry.key)
         chunks: List[BindingBatch] = []
         if batch.n == 0:
             chunks.append(BindingBatch.empty(cfg.q_pad))
@@ -66,7 +86,7 @@ class OPATEngine:
                 in_rows[: chunk.n] = chunk.rows
                 in_step[: chunk.n] = chunk.step
                 in_valid[: chunk.n] = True
-            res = self._eval(self._parts[pid], self.pg.g2l[pid], self.pg.owner,
+            res = self._eval(entry.part, entry.g2l, self.store.owner,
                              plan_arrays, np.int32(n_steps),
                              in_rows, in_step, in_valid,
                              np.bool_(seed_fresh and ci == 0))
@@ -103,6 +123,7 @@ class OPATEngine:
         st = QueryState.initial(self.pg.k, cfg.q_pad, counts,
                                 track_answer_keys=max_answers is not None)
         limit = max_loads if max_loads is not None else 64 * self.pg.k
+        load0 = self.store.stats.copy()
 
         while not st.budget_met(max_answers):
             eligible = st.eligible()
@@ -114,23 +135,35 @@ class OPATEngine:
             sni = {p: st.sni_count(p) for p in eligible}
             rates = (st.completion_rates() if heuristic == MAX_YIELD
                      else None)
-            pid = choose_partition(heuristic, eligible, sni, rng, rates)
+            ranked = rank_partitions(heuristic, eligible, sni, rng, rates)
+            pid = ranked[0]
             st.loads.append(pid)
             st.iterations += 1
             batch = st.ima[pid]
             st.ima[pid] = BindingBatch.empty(cfg.q_pad)
             seed_fresh = bool(st.fresh_pending[pid])
             st.fresh_pending[pid] = False
-            self._run_partition(pid, plan_arrays, plan.n_steps, batch,
+            entry = self.store.get(pid)
+            # stage the heuristic's runner-up while pid evaluates: the
+            # device_put dispatch below returns immediately, so the
+            # transfer overlaps the evaluator work (ROADMAP item #1)
+            if self.prefetch and len(ranked) > 1:
+                self.store.prefetch(ranked[1])
+            self._run_partition(entry, plan_arrays, plan.n_steps, batch,
                                 seed_fresh, st)
 
         answers = truncate_answers(st.unique_answers(), max_answers)
-        stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
+        delta = self.store.stats - load0
+        stats = RunStats(query=plan.query.name, scheme=self.pg.scheme,
+                         heuristic=heuristic,
                          loads=list(st.loads),
                          l_ideal=l_ideal_for_plan(self.pg, plan),
                          n_answers=int(answers.shape[0]),
                          iterations=st.iterations,
-                         answers_requested=max_answers)
+                         answers_requested=max_answers,
+                         cold_loads=delta.cold_loads,
+                         warm_loads=delta.warm_loads,
+                         prefetch_hits=delta.prefetch_hits)
         return OPATResult(answers=answers, stats=stats, state=st)
 
     def run_request(self, req: RunRequest) -> RunReport:

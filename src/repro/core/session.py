@@ -1,0 +1,235 @@
+"""GraphSession — the stateful serving API over one partitioned graph.
+
+The paper's workload is *query serving*: many queries, one partitioned
+graph, response time dominated by the partition-load sequence.  The seed
+code had no object for that shape — every caller re-built engines and
+re-shipped partitions per query.  A ``GraphSession`` is constructed once
+from (graph, scheme, k, engine, EngineConfig) and then serves repeated
+``submit`` calls against the same residency state:
+
+  * it owns the ``PartitionStore`` (core/store.py), so the second query
+    finds the first query's partitions device-resident — warm loads — and
+    OPAT's runner-up prefetch overlaps transfers with evaluation;
+  * it owns the catalog and the engine (one compile of the partition
+    evaluator per session, reused across queries);
+  * it accumulates a per-partition *workload profile* — loads, completed
+    vs spawned rows, completion rates, answers — that persists to JSON.
+    This is the observability hook WawPart-style workload-aware
+    repartitioning (ROADMAP item #2) consumes: hot query paths show up as
+    partitions with many loads and low completion rates, i.e. spanning
+    work the partitioner should co-locate.
+
+``submit(query, max_answers=K)`` accepts a conjunctive ``Query`` or a
+``DisjunctiveQuery`` (per-disjunct plans, unioned answers; a budget K
+applies per disjunct, matching ``launch/serve.py`` semantics) and returns a
+``QueryResult`` carrying the merged answers, per-disjunct ``RunReport``s,
+wall latency, and this call's cold/warm/prefetch ``LoadStats`` delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+from .catalog import Catalog, build_catalog
+from .engine import EngineConfig
+from .graph import Graph, PartitionedGraph, build_partitions
+from .heuristics import MAX_SN
+from .metrics import RunStats
+from .partition import partition_graph
+from .plan import generate_plan
+from .query import DisjunctiveQuery, Query
+from .runner import QueryRunner, RunReport, RunRequest
+from .store import LoadStats, PartitionStore
+
+ENGINES = ("opat", "traditional", "mapreduce")
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """What ``GraphSession.submit`` returns for one (possibly disjunctive)
+    query: merged unique answers plus everything observability needs."""
+
+    name: str
+    answers: np.ndarray            # [n, q_pad] unique rows (union of disjuncts)
+    reports: List[RunReport]       # one per disjunct, in disjunct order
+    latency_s: float
+    load_stats: LoadStats          # this call's store delta (cold/warm/prefetch)
+
+    @property
+    def n_answers(self) -> int:
+        return int(self.answers.shape[0])
+
+    @property
+    def stats(self) -> List[RunStats]:
+        return [r.stats for r in self.reports]
+
+    @property
+    def n_loads(self) -> int:
+        return sum(s.n_loads for s in self.stats)
+
+
+class GraphSession:
+    """One partitioned graph, one engine compile, many queries.
+
+    Parameters mirror the serving CLI: ``engine`` is one of ``"opat"``,
+    ``"traditional"``, ``"mapreduce"``; ``cache_parts`` / ``cache_bytes``
+    size the store's LRU device cache (None = unbounded); ``prefetch``
+    enables OPAT's runner-up staging.  Pass ``pg`` to reuse an existing
+    ``PartitionedGraph`` (then ``graph``/``k``/``scheme`` are taken from
+    it); ``mesh`` is required context for MapReduceMP on >1 device
+    (defaults to a 1-D mesh over all local devices).
+    """
+
+    def __init__(self, graph: Optional[Graph] = None, *,
+                 k: int = 4,
+                 scheme: str = "kway_shem",
+                 engine: str = "opat",
+                 heuristic: str = MAX_SN,
+                 config: Optional[EngineConfig] = None,
+                 cache_parts: Optional[int] = None,
+                 cache_bytes: Optional[int] = None,
+                 processors: int = 2,
+                 prefetch: bool = True,
+                 seed: int = 0,
+                 pg: Optional[PartitionedGraph] = None,
+                 mesh: Optional[Any] = None,
+                 catalog: Optional[Catalog] = None):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if pg is None:
+            if graph is None:
+                raise ValueError("need a graph (or a pre-built pg)")
+            assign = partition_graph(graph, k, scheme, seed=seed)
+            pg = build_partitions(graph, assign, k, scheme=scheme)
+        self.pg = pg
+        self.graph = pg.graph
+        self.scheme = pg.scheme
+        self.k = pg.k
+        self.engine_name = engine
+        self.heuristic = heuristic
+        self.seed = seed
+        self.config = config or EngineConfig()
+        self.catalog = catalog if catalog is not None else build_catalog(self.graph)
+        self.store = PartitionStore(pg, capacity_parts=cache_parts,
+                                    capacity_bytes=cache_bytes)
+
+        if engine == "opat":
+            from .opat import OPATEngine
+            self.engine: QueryRunner = OPATEngine(
+                pg, self.config, store=self.store, prefetch=prefetch)
+        elif engine == "traditional":
+            from .traditional_mp import TraditionalMPEngine
+            self.engine = TraditionalMPEngine(
+                pg, processors, self.config, store=self.store)
+        else:
+            from ..compat import make_part_mesh
+            from .mapreduce_mp import MapReduceMPEngine
+            if mesh is None:
+                mesh = make_part_mesh(pg.k)
+            self.engine = MapReduceMPEngine(
+                pg, mesh, self.config, heuristic=heuristic, store=self.store)
+
+        # per-partition workload profile, accumulated across submits.
+        # MapReduceMP runs as one compiled program with no host loop, so it
+        # surfaces no per-partition load/yield counters — the profile flags
+        # that rather than passing off all-zeros as observations.
+        self.observes_partition_counters = engine != "mapreduce"
+        self._loads = np.zeros(self.k, dtype=np.int64)
+        self._completed = np.zeros(self.k, dtype=np.int64)
+        self._spawned = np.zeros(self.k, dtype=np.int64)
+        self._queries_served = 0
+        self._answers_served = 0
+
+    # -- serving -----------------------------------------------------------
+
+    def submit(self, query: Union[Query, DisjunctiveQuery],
+               max_answers: Optional[int] = None,
+               heuristic: Optional[str] = None,
+               seed: Optional[int] = None) -> QueryResult:
+        """Serve one query against the session's resident partitions.
+
+        ``max_answers`` is the paper's "specified number of answers" K
+        (per disjunct); ``heuristic``/``seed`` default to the session's.
+        """
+        disjuncts = (query.disjuncts if isinstance(query, DisjunctiveQuery)
+                     else [query])
+        h = heuristic if heuristic is not None else self.heuristic
+        s = seed if seed is not None else self.seed
+        stats0 = self.store.stats.copy()
+        t0 = time.time()
+        reports: List[RunReport] = []
+        answers: Optional[np.ndarray] = None
+        for q in disjuncts:
+            plan = generate_plan(q, self.graph, self.catalog)
+            rep = self.engine.run_request(RunRequest(
+                plan=plan, heuristic=h, max_answers=max_answers, seed=s))
+            reports.append(rep)
+            a = rep.answers
+            answers = a if answers is None else np.unique(
+                np.concatenate([answers, a]), axis=0)
+        latency = time.time() - t0
+        self._absorb(reports, int(answers.shape[0]))
+        return QueryResult(name=query.name, answers=answers, reports=reports,
+                           latency_s=latency,
+                           load_stats=self.store.stats - stats0)
+
+    def _absorb(self, reports: List[RunReport], n_answers: int) -> None:
+        for rep in reports:
+            for pid in rep.stats.loads:
+                self._loads[pid] += 1
+            st = rep.extra.get("state")
+            if st is not None:     # OPAT / TraditionalMP expose QueryState
+                self._completed += st.completed_from
+                self._spawned += st.spawned_from
+        self._queries_served += 1
+        self._answers_served += n_answers
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def load_stats(self) -> LoadStats:
+        """Lifetime store counters (cold/warm/evictions/prefetch)."""
+        return self.store.stats
+
+    def workload_profile(self) -> Dict[str, Any]:
+        """Per-partition load/yield/completion-rate profile of everything
+        this session served — the input a workload-aware repartitioner
+        (WawPart, arXiv:2203.14888) feeds on.
+
+        ``partition_counters_observed`` is False for MapReduceMP (no host
+        loop, so per-partition counters are structurally zero and a
+        repartitioner must not treat them as measurements).
+        """
+        partitions = []
+        for p in range(self.k):
+            comp = int(self._completed[p])
+            spawn = int(self._spawned[p])
+            partitions.append({
+                "pid": p,
+                "loads": int(self._loads[p]),
+                "completed": comp,
+                "spawned": spawn,
+                # Laplace-smoothed, matching heuristics.MAX_YIELD
+                "completion_rate": (comp + 1.0) / (comp + spawn + 2.0),
+            })
+        return {
+            "engine": self.engine_name,
+            "scheme": self.scheme,
+            "k": self.k,
+            "heuristic": self.heuristic,
+            "partition_counters_observed": self.observes_partition_counters,
+            "queries_served": self._queries_served,
+            "answers_served": self._answers_served,
+            "partitions": partitions,
+            "cache": self.store.stats.to_dict(),
+        }
+
+    def save_profile(self, path: str) -> None:
+        """Persist ``workload_profile()`` as JSON (the repartitioner/CI
+        artifact format)."""
+        with open(path, "w") as f:
+            json.dump(self.workload_profile(), f, indent=2)

@@ -1,0 +1,310 @@
+"""PartitionStore — explicit partition residency for all three engines.
+
+The paper's central cost model is the partition *load* sequence: OPAT pays
+one load per heuristic pick, TraditionalMP one stacked load of its top-p
+set per iteration, MapReduceMP one all-partitions load at job start.  The
+seed code made those loads implicit — every engine call re-shipped host
+numpy dicts through ``jit``, so a "load" was always a cold host->device
+transfer and nothing could be reused across queries.  This module makes
+residency a first-class object, the transfer layer that near-real-time
+graph serving (Vaquero et al., arXiv:1410.1903) and workload-aware
+repartitioning (WawPart, arXiv:2203.14888) both observe and steer.
+
+Cold vs warm semantics (shared vocabulary for ``RunStats`` / ``LoadStats``):
+
+  cold load  — the requested entry was not device-resident; the store pays
+               a ``jax.device_put`` transfer on the caller's critical path
+               (a cache *miss*).
+  warm load  — the entry was already device-resident (from an earlier get
+               or a prefetch); the caller reuses the committed buffers and
+               pays no transfer (a cache *hit*).
+  prefetch   — ``prefetch(pid)`` stages an entry *off* the critical path:
+               ``device_put`` dispatches asynchronously, so staging the
+               heuristic's next-ranked partition overlaps with the current
+               partition's evaluation.  A later ``get`` of a prefetched
+               entry is a warm load and additionally counts as a
+               ``prefetch_hit`` — the transfer happened, but nobody waited
+               for it.
+
+Eviction is LRU with a configurable capacity, in partitions
+(``capacity_parts``; a stacked entry of n partitions costs n) or bytes
+(``capacity_bytes``).  With no capacity the store holds every
+single-partition entry it has ever staged (fine at laptop scale; serving
+deployments size it to HBM); *stacked* entries are always additionally
+capped at ``max_stacked_entries`` distinct tuples (LRU), since each one
+duplicates its partitions' buffers.
+
+Entries come in two shapes, matching how the engines consume partitions:
+
+  ``get(pid)``            — one partition: the evaluator input dict plus
+                            that partition's g2l row (OPAT).
+  ``get_stacked(pids)``   — ``np.stack`` of the dicts over a pid tuple plus
+                            the stacked g2l rows, optionally ``device_put``
+                            with a target sharding (TraditionalMP's top-p
+                            set; MapReduceMP's one-per-device full stack).
+
+Both return committed jax Arrays, so repeated jit calls reuse the same
+device buffers instead of re-transferring host memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from .engine import part_to_device_dict
+from .graph import PartitionedGraph
+
+# a cache key: one partition id, or an ordered tuple of them (stacked entry)
+StoreKey = Union[int, Tuple[int, ...]]
+
+
+@dataclasses.dataclass
+class LoadStats:
+    """Residency counters; deltas of two snapshots describe one run."""
+
+    hits: int = 0                # warm loads (entry already device-resident)
+    misses: int = 0              # cold loads (device_put on the critical path)
+    evictions: int = 0           # LRU entries dropped to fit capacity
+    prefetch_issued: int = 0     # prefetch() calls that actually staged
+    prefetch_hits: int = 0       # gets served by a previously prefetched entry
+    bytes_cold: int = 0          # bytes transferred by cold (demand) loads
+    bytes_prefetched: int = 0    # bytes transferred off the critical path
+
+    @property
+    def warm_loads(self) -> int:
+        return self.hits
+
+    @property
+    def cold_loads(self) -> int:
+        return self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def copy(self) -> "LoadStats":
+        return dataclasses.replace(self)
+
+    def __sub__(self, other: "LoadStats") -> "LoadStats":
+        return LoadStats(**{f.name: getattr(self, f.name) - getattr(other, f.name)
+                            for f in dataclasses.fields(self)})
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["warm_loads"] = self.warm_loads
+        d["cold_loads"] = self.cold_loads
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+@dataclasses.dataclass
+class StoreEntry:
+    """One device-resident unit: evaluator inputs + the matching g2l row(s)."""
+
+    key: StoreKey
+    part: Dict[str, jax.Array]   # evaluator input dict ([...] or stacked [n, ...])
+    g2l: jax.Array               # [V] row (single) or [n, V] rows (stacked)
+    nbytes: int
+    prefetched: bool = False     # staged by prefetch(), not yet touched by get()
+
+    @property
+    def cost_parts(self) -> int:
+        return len(self.key) if isinstance(self.key, tuple) else 1
+
+
+class PartitionStore:
+    """Owns which partitions are device-resident for one PartitionedGraph.
+
+    All three engines request partitions through the store instead of
+    holding private device copies; ``GraphSession`` shares one store across
+    every query it serves, which is what makes a repeated query warm.
+    """
+
+    def __init__(self, pg: PartitionedGraph,
+                 capacity_parts: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None,
+                 max_stacked_entries: Optional[int] = 8):
+        if capacity_parts is not None and capacity_parts < 1:
+            raise ValueError(f"capacity_parts must be >= 1, got {capacity_parts}")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError(f"capacity_bytes must be >= 1, got {capacity_bytes}")
+        if max_stacked_entries is not None and max_stacked_entries < 1:
+            raise ValueError(f"max_stacked_entries must be >= 1, "
+                             f"got {max_stacked_entries}")
+        self.pg = pg
+        self.capacity_parts = capacity_parts
+        self.capacity_bytes = capacity_bytes
+        # stacked entries duplicate their partitions' buffers, so even an
+        # otherwise-unbounded store caps how many distinct pid tuples stay
+        # resident (LRU beyond this) — a long-lived TraditionalMP session
+        # cycling through many top-p sets must not grow device memory
+        # without limit
+        self.max_stacked_entries = max_stacked_entries
+        self.stats = LoadStats()
+        # host staging copies (always resident; the "disk" tier in the
+        # paper's terms) — built once, the device cache stages from these
+        self._host = [part_to_device_dict(p) for p in pg.parts]
+        self._cache: "OrderedDict[Any, StoreEntry]" = OrderedDict()
+        self._owner_dev: Optional[jax.Array] = None
+
+    # -- global (non-partition) arrays ------------------------------------
+
+    @property
+    def owner(self) -> jax.Array:
+        """[V] owner table, device-committed once and shared by every run."""
+        if self._owner_dev is None:
+            self._owner_dev = jax.device_put(self.pg.owner)
+        return self._owner_dev
+
+    @property
+    def part_keys(self):
+        """Key set of the evaluator input dict (shared by every entry)."""
+        return self._host[0].keys()
+
+    # -- residency queries -------------------------------------------------
+
+    def resident_keys(self) -> list:
+        return [e.key for e in self._cache.values()]
+
+    def contains(self, key: StoreKey) -> bool:
+        """True when ``key`` is resident under ANY staging (a stacked entry
+        staged with a sharding is cached under a (key, sharding) pair)."""
+        return bool(self._cache_keys_for(key))
+
+    def host_nbytes(self, pid: int) -> int:
+        return sum(np.asarray(v).nbytes for v in self._host[pid].values()) \
+            + self.pg.g2l[pid].nbytes
+
+    # -- loads -------------------------------------------------------------
+
+    def get(self, pid: int) -> StoreEntry:
+        """One partition's evaluator inputs, device-resident (OPAT's load)."""
+        return self._lookup(int(pid), sharding=None)
+
+    def get_stacked(self, pids: Sequence[int],
+                    sharding: Optional[Any] = None) -> StoreEntry:
+        """A stacked [n, ...] bundle over ``pids`` (order-sensitive), the
+        unit TraditionalMP ships per iteration and MapReduceMP ships once.
+        ``sharding`` (e.g. ``NamedSharding(mesh, P('part'))``) distributes
+        the leading axis across devices at staging time."""
+        key = tuple(int(p) for p in pids)
+        if not key:
+            raise ValueError("get_stacked needs at least one partition id")
+        return self._lookup(key, sharding=sharding)
+
+    def prefetch(self, pid: int) -> bool:
+        """Stage ``pid`` off the critical path (async ``device_put``); a
+        later ``get(pid)`` then never pays a cold transfer.  Returns True
+        when a transfer was actually issued (False: already resident)."""
+        pid = int(pid)
+        if pid in self._cache:
+            return False
+        entry = self._stage(pid, sharding=None)
+        entry.prefetched = True
+        self.stats.prefetch_issued += 1
+        self.stats.bytes_prefetched += entry.nbytes
+        self._insert(entry)
+        return True
+
+    def drop(self, key: StoreKey) -> bool:
+        """Explicitly release every staging of ``key`` — including
+        sharding-qualified ones (not counted as evictions)."""
+        cks = self._cache_keys_for(key)
+        for ck in cks:
+            del self._cache[ck]
+        return bool(cks)
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+    # -- internals ---------------------------------------------------------
+
+    @staticmethod
+    def _normkey(key: StoreKey):
+        return tuple(int(p) for p in key) if isinstance(key, tuple) else int(key)
+
+    def _cache_keys_for(self, key: StoreKey) -> list:
+        """All cache keys whose *base* key matches (sharded stagings live
+        under (key, str(sharding)) composite cache keys)."""
+        nk = self._normkey(key)
+        return [ck for ck, e in self._cache.items() if self._normkey(e.key) == nk]
+
+    def _lookup(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
+        # a stacked entry staged under a different sharding must not be
+        # served for a differently-sharded request; fold it into the key
+        ck = (key, str(sharding)) if sharding is not None else key
+        got = self._cache.get(ck)
+        if got is not None:
+            self._cache.move_to_end(ck)
+            self.stats.hits += 1
+            if got.prefetched:
+                got.prefetched = False
+                self.stats.prefetch_hits += 1
+            return got
+        entry = self._stage(key, sharding=sharding)
+        self.stats.misses += 1
+        self.stats.bytes_cold += entry.nbytes
+        self._insert(entry, cache_key=ck)
+        return entry
+
+    def _stage(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
+        """Build the host bundle and dispatch its device transfer
+        (``device_put`` is asynchronous: it returns immediately with
+        arrays whose data lands on the device in the background)."""
+        if isinstance(key, tuple):
+            host = {k: np.stack([self._host[p][k] for p in key])
+                    for k in self._host[key[0]].keys()}
+            g2l = self.pg.g2l[np.asarray(key, dtype=np.int64)]
+        else:
+            host = self._host[key]
+            g2l = self.pg.g2l[key]
+        nbytes = sum(np.asarray(v).nbytes for v in host.values()) + g2l.nbytes
+        if sharding is not None:
+            dev = {k: jax.device_put(v, sharding) for k, v in host.items()}
+            g2l_dev = jax.device_put(g2l, sharding)
+        else:
+            dev = jax.device_put(host)
+            g2l_dev = jax.device_put(g2l)
+        return StoreEntry(key=key, part=dev, g2l=g2l_dev, nbytes=nbytes)
+
+    def _insert(self, entry: StoreEntry, cache_key: Optional[Any] = None) -> None:
+        ck = cache_key if cache_key is not None else self._normkey(entry.key)
+        self._cache[ck] = entry
+        self._cache.move_to_end(ck)
+        self._evict_to_capacity(keep=ck)
+
+    def _evict_to_capacity(self, keep: Any) -> None:
+        """Drop least-recently-used entries until within capacity.  The
+        just-inserted entry is never evicted, even if it alone exceeds the
+        budget — the caller needs it regardless."""
+        def over() -> bool:
+            if self.capacity_parts is not None:
+                if sum(e.cost_parts for e in self._cache.values()) > self.capacity_parts:
+                    return True
+            if self.capacity_bytes is not None:
+                if sum(e.nbytes for e in self._cache.values()) > self.capacity_bytes:
+                    return True
+            return False
+
+        while over():
+            victim = next((k for k in self._cache if k != keep), None)
+            if victim is None:
+                break
+            del self._cache[victim]
+            self.stats.evictions += 1
+
+        if self.max_stacked_entries is not None:
+            def stacked():
+                return [k for k, e in self._cache.items()
+                        if isinstance(e.key, tuple)]
+            while len(stacked()) > self.max_stacked_entries:
+                victim = next((k for k in stacked() if k != keep), None)
+                if victim is None:
+                    break
+                del self._cache[victim]
+                self.stats.evictions += 1

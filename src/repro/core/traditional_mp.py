@@ -13,18 +13,19 @@ host merge loop is order-insensitive.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import numpy as np
 
-from .engine import EngineConfig, make_partition_evaluator, part_to_device_dict
+from .engine import EngineConfig, make_partition_evaluator
 from .graph import PartitionedGraph
 from .heuristics import MAX_YIELD, choose_top_p
 from .metrics import RunStats, l_ideal_for_plan
 from .plan import Plan, PlanArrays
 from .runner import RunReport, RunRequest, truncate_answers
 from .state import BindingBatch, QueryState
+from .store import PartitionStore
 
 
 @dataclasses.dataclass
@@ -36,8 +37,13 @@ class TraditionalMPResult:
 
 
 class TraditionalMPEngine:
+    """``store`` defaults to a private unbounded ``PartitionStore``; its
+    load unit is the *stacked* top-p bundle one iteration ships to the p
+    processors, so a recurring top-p set is a warm load."""
+
     def __init__(self, pg: PartitionedGraph, n_processors: int,
-                 cfg: Optional[EngineConfig] = None):
+                 cfg: Optional[EngineConfig] = None,
+                 store: Optional[PartitionStore] = None):
         assert n_processors >= 1
         self.pg = pg
         self.p = n_processors
@@ -47,11 +53,7 @@ class TraditionalMPEngine:
         # vmapped over (partition arrays, g2l row, inputs); plan broadcast
         self._veval = jax.jit(jax.vmap(
             self._eval, in_axes=(0, 0, None, None, None, 0, 0, 0, 0)))
-        self._parts = [part_to_device_dict(p_) for p_ in pg.parts]
-
-    def _stack(self, pids: List[int]) -> Dict[str, np.ndarray]:
-        keys = self._parts[0].keys()
-        return {k: np.stack([self._parts[p][k] for p in pids]) for k in keys}
+        self.store = store if store is not None else PartitionStore(pg)
 
     def run(self, plan: Plan, heuristic: str, seed: int = 0,
             max_iterations: Optional[int] = None,
@@ -67,6 +69,7 @@ class TraditionalMPEngine:
                                 track_answer_keys=max_answers is not None)
         limit = max_iterations if max_iterations is not None else 64 * self.pg.k
         per_iter: List[List[int]] = []
+        load0 = self.store.stats.copy()
 
         # budget check after each top-p merge (and before the first load:
         # a K=0 request does no work)
@@ -82,6 +85,13 @@ class TraditionalMPEngine:
             chosen = choose_top_p(heuristic, eligible, sni, self.p, rng, rates)
             per_iter.append(list(chosen))
             st.iterations += 1
+            # process the set in sorted order: which processor runs which
+            # partition is arbitrary (Algorithm 1 lines 6-8), and a
+            # canonical order — including the chosen[0] padding below —
+            # makes the stacked store key permutation-invariant, so
+            # heuristic tie-break order never forces a cold re-stage of
+            # the same top-p set
+            chosen = sorted(chosen)
 
             # pad the chosen set to exactly p so the vmapped evaluator keeps a
             # single compiled shape (padding entries are no-ops: empty input,
@@ -107,6 +117,18 @@ class TraditionalMPEngine:
                 batches.append(BindingBatch.empty(cfg.q_pad))
                 seeds.append(False)
 
+            # canonicalize lane order: IMA merging is order-insensitive
+            # (Algorithm 1 line 9), so which vmap lane runs which partition
+            # doesn't matter — sorting collapses permutations of the same
+            # top-p set onto one stacked store entry (warm across
+            # iterations regardless of heuristic tie-break order)
+            lanes = sorted(zip(exec_set, batches, seeds, is_real),
+                           key=lambda t: t[0])
+            exec_set = [t[0] for t in lanes]
+            batches = [t[1] for t in lanes]
+            seeds = [t[2] for t in lanes]
+            is_real = [t[3] for t in lanes]
+
             n = self.p
             in_rows = np.full((n, cfg.cap, cfg.q_pad), -1, dtype=np.int32)
             in_step = np.zeros((n, cfg.cap), dtype=np.int32)
@@ -117,8 +139,8 @@ class TraditionalMPEngine:
                     in_step[i, : b.n] = b.step
                     in_valid[i, : b.n] = True
 
-            res = self._veval(self._stack(exec_set),
-                              self.pg.g2l[np.asarray(exec_set)], self.pg.owner,
+            entry = self.store.get_stacked(tuple(exec_set))
+            res = self._veval(entry.part, entry.g2l, self.store.owner,
                               plan_arrays, np.int32(plan.n_steps),
                               in_rows, in_step, in_valid,
                               np.asarray(seeds, dtype=bool))
@@ -148,12 +170,17 @@ class TraditionalMPEngine:
                             ).dedup()
 
         answers = truncate_answers(st.unique_answers(), max_answers)
-        stats = RunStats(query=plan.query.name, scheme="?", heuristic=heuristic,
+        delta = self.store.stats - load0
+        stats = RunStats(query=plan.query.name, scheme=self.pg.scheme,
+                         heuristic=heuristic,
                          loads=list(st.loads),
                          l_ideal=l_ideal_for_plan(self.pg, plan),
                          n_answers=int(answers.shape[0]),
                          iterations=st.iterations,
-                         answers_requested=max_answers)
+                         answers_requested=max_answers,
+                         cold_loads=delta.cold_loads,
+                         warm_loads=delta.warm_loads,
+                         prefetch_hits=delta.prefetch_hits)
         return TraditionalMPResult(answers=answers, stats=stats,
                                    state=st, partitions_per_iteration=per_iter)
 

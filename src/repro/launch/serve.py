@@ -1,13 +1,19 @@
-"""End-to-end query-serving driver — the paper's kind of workload.
+"""End-to-end query-serving driver — a thin client of ``GraphSession``.
 
-Loads (or generates) a graph database, partitions it with a chosen scheme,
-builds the catalog, and serves a batch of queries through one of the three
-evaluation strategies (OPAT / TraditionalMP / MapReduceMP), reporting the
-paper's metrics: partition-load sequences, load ratios vs L_ideal, answer
-counts, and per-query latency.
+Loads (or generates) a graph database and opens one ``GraphSession``
+(core/session.py): the session partitions the graph with the chosen
+scheme, owns the ``PartitionStore`` (device-resident partitions, LRU
+capacity via ``--cache-parts``, OPAT runner-up prefetch) and the compiled
+evaluators, then serves the query batch through one of the three
+strategies (OPAT / TraditionalMP / MapReduceMP).  Reported per query: the
+paper's metrics (partition-load sequences, load ratios vs L_ideal, answer
+counts, latency) plus the store's cold/warm/prefetch split; the ``--json``
+report additionally carries the session's cache counters and per-partition
+workload profile (the WawPart-style repartitioning input).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset imdb --k 4 \
-        --scheme ecosocial --engine opat --heuristic max-sn
+        --scheme ecosocial --engine opat --heuristic max-sn \
+        --max-answers 5 --cache-parts 2 --json report.json
 
 MapReduceMP needs one device per partition; run with
     XLA_FLAGS=--xla_force_host_platform_device_count=4
@@ -18,14 +24,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
 
-from repro.core import (EngineConfig, MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN,
-                        OPATEngine, RunRequest, TraditionalMPEngine,
-                        build_catalog, build_partitions, generate_plan,
-                        match_query, partition_graph, partition_quality,
+from repro.core import (EngineConfig, GraphSession, MAX_SN, MAX_YIELD, MIN_SN,
+                        RANDOM_SN, partition_quality,
                         total_connected_components)
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)
@@ -61,67 +66,59 @@ def main() -> None:
                     help="answer budget K per disjunct: stop after K unique "
                          "answers (the paper's 'specified number of "
                          "answers'; default: all)")
+    ap.add_argument("--cache-parts", type=int, default=None,
+                    help="PartitionStore LRU capacity in partitions "
+                         "(default: unbounded — everything staged stays "
+                         "device-resident)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable OPAT's runner-up partition prefetch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="check answers against the whole-graph oracle")
     ap.add_argument("--cap", type=int, default=16384)
     ap.add_argument("--json", default="", help="write a JSON report here")
+    ap.add_argument("--profile-json", default="",
+                    help="also write the workload profile alone here")
     args = ap.parse_args()
 
     graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
     print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
 
     t0 = time.time()
-    assign = partition_graph(graph, args.k, args.scheme, seed=args.seed)
-    pg = build_partitions(graph, assign, args.k)
-    q = partition_quality(graph, assign, args.k)
-    print(f"[serve] partitioned k={args.k} scheme={args.scheme} "
-          f"cut={q['cut']} ({q['cut_frac']:.1%}) sizes={q['sizes']} "
-          f"total_cc={total_connected_components(pg)} "
+    session = GraphSession(graph, k=args.k, scheme=args.scheme,
+                           engine=args.engine, heuristic=args.heuristic,
+                           config=EngineConfig(cap=args.cap),
+                           cache_parts=args.cache_parts,
+                           processors=args.processors,
+                           prefetch=not args.no_prefetch,
+                           seed=args.seed)
+    q = partition_quality(graph, session.pg.assignment, args.k)
+    print(f"[serve] session: k={args.k} scheme={args.scheme} "
+          f"engine={args.engine} cut={q['cut']} ({q['cut_frac']:.1%}) "
+          f"sizes={q['sizes']} "
+          f"total_cc={total_connected_components(session.pg)} "
+          f"cache_parts={args.cache_parts or 'unbounded'} "
           f"[{time.time()-t0:.1f}s]")
 
-    catalog = build_catalog(graph)
-    ecfg = EngineConfig(cap=args.cap)
-
-    if args.engine == "opat":
-        engine = OPATEngine(pg, ecfg)
-    elif args.engine == "traditional":
-        engine = TraditionalMPEngine(pg, args.processors, ecfg)
-    else:
-        from repro.compat import make_part_mesh
-        from repro.core.mapreduce_mp import MapReduceMPEngine
-        mesh = make_part_mesh(args.k)
-        engine = MapReduceMPEngine(pg, mesh, ecfg, heuristic=args.heuristic)
-
-    # all three engines speak the QueryRunner protocol (core/runner.py)
-    def run(plan):
-        return engine.run_request(RunRequest(
-            plan=plan, heuristic=args.heuristic,
-            max_answers=args.max_answers, seed=args.seed))
-
-    report = []
+    records = []
+    mismatches = 0
     for dq in dqueries:
-        answers = None
-        stats = []
-        t0 = time.time()
-        for disjunct in dq.disjuncts:
-            plan = generate_plan(disjunct, graph, catalog)
-            res = run(plan)
-            stats.append(res.stats)
-            a = res.answers
-            answers = a if answers is None else np.unique(
-                np.concatenate([answers, a]), axis=0)
-        dt = time.time() - t0
-        n_loads = sum(s.n_loads for s in stats)
-        l_ideal = max(s.l_ideal for s in stats)
-        iters = max(s.iterations for s in stats)
+        res = session.submit(dq, max_answers=args.max_answers)
+        answers = res.answers
+        n_loads = res.n_loads
+        l_ideal = max(s.l_ideal for s in res.stats)
+        iters = max(s.iterations for s in res.stats)
+        ls = res.load_stats
         print(f"[serve] {dq.name}: answers={answers.shape[0]:5d} "
-              f"loads={n_loads} L_ideal={l_ideal} iters={iters} "
-              f"latency={dt*1000:.0f} ms "
-              f"load_seq={[s.loads for s in stats]}")
+              f"loads={n_loads} (cold={ls.cold_loads} warm={ls.warm_loads} "
+              f"pf_hits={ls.prefetch_hits}) L_ideal={l_ideal} iters={iters} "
+              f"latency={res.latency_s*1000:.0f} ms "
+              f"load_seq={[s.loads for s in res.stats]}")
         rec = {"query": dq.name, "answers": int(answers.shape[0]),
                "loads": n_loads, "l_ideal": l_ideal, "iterations": iters,
-               "latency_s": dt}
+               "latency_s": res.latency_s,
+               "cold_loads": ls.cold_loads, "warm_loads": ls.warm_loads,
+               "prefetch_hits": ls.prefetch_hits}
         if args.verify:
             from repro.core.oracle import match_disjunctive
             ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
@@ -139,13 +136,31 @@ def main() -> None:
                          and answers.shape[0] >= min(args.max_answers,
                                                      ref.shape[0]))
             rec["oracle_match"] = bool(match)
+            mismatches += int(not match)
             print(f"        oracle: {ref.shape[0]} answers "
                   f"{'MATCH' if match else 'MISMATCH'}")
-        report.append(rec)
+        records.append(rec)
+
+    cache = session.load_stats.to_dict()
+    print(f"[serve] session cache: {cache['cold_loads']} cold / "
+          f"{cache['warm_loads']} warm loads "
+          f"(hit rate {cache['hit_rate']:.1%}), "
+          f"{cache['evictions']} evictions, "
+          f"{cache['prefetch_issued']} prefetches "
+          f"({cache['prefetch_hits']} hit), "
+          f"{cache['bytes_cold']} cold bytes")
 
     if args.json:
+        report = {"queries": records,
+                  "cache": cache,
+                  "workload_profile": session.workload_profile()}
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
+    if args.profile_json:
+        session.save_profile(args.profile_json)
+    if mismatches:   # --verify is a gate (CI runs this): fail on MISMATCH
+        sys.exit(f"[serve] {mismatches} quer{'y' if mismatches == 1 else 'ies'} "
+                 f"MISMATCHED the oracle")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,338 @@
+"""PartitionStore residency semantics (core/store.py) + GraphSession
+serving behaviour (core/session.py).
+
+Covers the ISSUE-2 satellite/acceptance list:
+  * LRU eviction order and hit/miss/eviction accounting,
+  * prefetch staging byte-identical device buffers to a cold load,
+  * OPAT answers unchanged under cache capacities 1, 2, and k,
+  * GraphSession.submit == fresh per-query engine run for all 3 engines,
+  * a repeated OPAT query on a warm session: >= 1 cache hit and strictly
+    fewer cold transfers than its first run.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, MAX_SN, GraphSession, LoadStats,
+                        OPATEngine, PartitionStore, RunRequest,
+                        TraditionalMPEngine, build_catalog, build_partitions,
+                        generate_plan, match_query, partition_graph)
+from repro.data.generators import subgen_like_graph, subgen_queries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = subgen_like_graph(n_nodes=250, n_edges=700, n_embed=10, seed=3)
+    assign = partition_graph(g, 4, "kway_shem")
+    pg = build_partitions(g, assign, 4, scheme="kway_shem")
+    cat = build_catalog(g)
+    queries = [dq.disjuncts[0] for dq in subgen_queries(g)]
+    dqueries = subgen_queries(g)
+    return g, pg, cat, queries, dqueries
+
+
+# ---------------------------------------------------------------------------
+# PartitionStore unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_cold_then_warm_accounting(setup):
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg)
+    assert store.stats.cold_loads == 0 and store.stats.warm_loads == 0
+    e0 = store.get(0)
+    assert store.stats.misses == 1 and store.stats.hits == 0
+    assert store.stats.bytes_cold == e0.nbytes > 0
+    e0b = store.get(0)
+    assert store.stats.misses == 1 and store.stats.hits == 1
+    # a warm load returns the SAME committed device buffers, not a copy
+    assert e0b.part["node_gid"] is e0.part["node_gid"]
+    assert store.stats.hit_rate == 0.5
+
+
+def test_lru_eviction_order(setup):
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg, capacity_parts=2)
+    store.get(0)
+    store.get(1)
+    assert sorted(store.resident_keys()) == [0, 1]
+    store.get(0)              # refresh 0 -> LRU order is now [1, 0]
+    store.get(2)              # must evict 1 (least recently used), not 0
+    assert sorted(store.resident_keys()) == [0, 2]
+    assert store.stats.evictions == 1
+    store.get(3)              # evicts 0
+    assert sorted(store.resident_keys()) == [2, 3]
+    assert store.stats.evictions == 2
+    # re-touching an evicted partition is a cold load again
+    m0 = store.stats.misses
+    store.get(1)
+    assert store.stats.misses == m0 + 1
+
+
+def test_capacity_one_never_holds_two(setup):
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg, capacity_parts=1)
+    for pid in (0, 1, 2, 3, 0):
+        store.get(pid)
+        assert len(store.resident_keys()) == 1
+    assert store.stats.misses == 5 and store.stats.evictions == 4
+
+
+def test_capacity_bytes_evicts(setup):
+    g, pg, cat, queries, _ = setup
+    one = PartitionStore(pg).get(0).nbytes
+    # room for ~1.5 partitions -> second get must evict the first
+    store = PartitionStore(pg, capacity_bytes=int(1.5 * one))
+    store.get(0)
+    store.get(1)
+    assert store.resident_keys() == [1]
+    assert store.stats.evictions == 1
+
+
+def test_prefetch_byte_identical_to_cold_load(setup):
+    g, pg, cat, queries, _ = setup
+    cold = PartitionStore(pg)
+    warm = PartitionStore(pg)
+    ref = cold.get(2)                       # demand (cold) load
+    assert warm.prefetch(2) is True
+    got = warm.get(2)                       # served by the prefetched entry
+    assert warm.stats.misses == 0 and warm.stats.hits == 1
+    assert warm.stats.prefetch_issued == 1 and warm.stats.prefetch_hits == 1
+    assert warm.stats.bytes_cold == 0
+    assert warm.stats.bytes_prefetched == ref.nbytes
+    for k in ref.part:  # byte-identical (NaN-safe) buffer comparison
+        assert np.asarray(ref.part[k]).tobytes() == np.asarray(got.part[k]).tobytes(), k
+    assert np.asarray(ref.g2l).tobytes() == np.asarray(got.g2l).tobytes()
+    # prefetching a resident entry is a no-op, and a second get is a plain
+    # hit (prefetch_hits counts first touches only)
+    assert warm.prefetch(2) is False
+    warm.get(2)
+    assert warm.stats.prefetch_issued == 1 and warm.stats.prefetch_hits == 1
+
+
+def test_stacked_entries_and_sharding_keys(setup):
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg)
+    e = store.get_stacked((1, 0, 1))
+    assert e.part["node_gid"].shape[0] == 3 and e.g2l.shape[0] == 3
+    assert np.array_equal(np.asarray(e.part["pid"]), np.asarray([1, 0, 1]))
+    store.get_stacked((1, 0, 1))
+    assert store.stats.hits == 1            # same tuple -> warm
+    store.get_stacked((0, 1, 1))
+    assert store.stats.misses == 2          # order matters -> distinct entry
+    # a stacked entry of n partitions costs n against capacity_parts
+    small = PartitionStore(pg, capacity_parts=2)
+    small.get(0)
+    small.get_stacked((1, 2))
+    assert small.resident_keys() == [(1, 2)]
+    assert small.stats.evictions == 1
+
+
+def test_stacked_entry_count_is_bounded(setup):
+    """Even an otherwise-unbounded store caps distinct stacked tuples
+    (each duplicates its partitions' buffers): LRU beyond the cap."""
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg, max_stacked_entries=2)
+    store.get(0)                       # singles are not affected by the cap
+    store.get_stacked((0, 1))
+    store.get_stacked((1, 2))
+    store.get_stacked((2, 3))          # evicts (0, 1), the LRU tuple
+    keys = store.resident_keys()
+    assert 0 in keys and (0, 1) not in keys
+    assert (1, 2) in keys and (2, 3) in keys
+    assert store.stats.evictions == 1
+    with pytest.raises(ValueError):
+        PartitionStore(pg, max_stacked_entries=0)
+
+
+def test_contains_and_drop_match_sharded_stagings(setup):
+    """contains()/drop() must see entries staged WITH a sharding (cached
+    under a (key, sharding) composite) — MapReduceMP's all-partitions
+    bundle must be releasable through the public API."""
+    import jax
+    from jax.sharding import SingleDeviceSharding
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg)
+    sh = SingleDeviceSharding(jax.devices()[0])
+    store.get_stacked((0, 1), sharding=sh)
+    assert store.contains((0, 1))
+    assert store.drop((0, 1)) is True
+    assert not store.contains((0, 1))
+    assert store.drop((0, 1)) is False
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_traditional_mp_lane_order_is_canonical(setup, p):
+    """Permutations of the same top-p set reuse one stacked entry — the
+    staged tuple must be permutation-invariant in the chosen set even when
+    under-full iterations pad lanes (p=4 over <4 eligible partitions
+    exercises the padding path), and stay oracle-exact."""
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg)
+    eng = TraditionalMPEngine(pg, p, EngineConfig(cap=16384), store=store)
+    for seed in (1, 2):    # vary heuristic tie-break order
+        for q in queries:
+            plan = generate_plan(q, g, cat)
+            res = eng.run(plan, MAX_SN, seed=seed)
+            assert np.array_equal(np.unique(res.answers, axis=0),
+                                  match_query(g, q, q_pad=8)), q.name
+            for it in res.partitions_per_iteration:
+                assert len(it) <= p
+    # every stacked key is in canonical form: the distinct pids sorted,
+    # with padding lanes replicating the smallest pid — so the same chosen
+    # set always maps to the same key, whatever order the heuristic
+    # returned it in
+    for k in store.resident_keys():
+        if isinstance(k, tuple):
+            distinct = sorted(set(k))
+            expect = sorted(distinct + [distinct[0]] * (len(k) - len(distinct)))
+            assert list(k) == expect, k
+    assert store.stats.hits > 0        # recurring sets actually warm
+
+
+def test_load_stats_delta_and_validation(setup):
+    g, pg, cat, queries, _ = setup
+    a = LoadStats(hits=5, misses=3, evictions=1)
+    b = LoadStats(hits=2, misses=3)
+    d = a - b
+    assert d.hits == 3 and d.misses == 0 and d.evictions == 1
+    with pytest.raises(ValueError):
+        PartitionStore(pg, capacity_parts=0)
+    with pytest.raises(ValueError):
+        PartitionStore(pg).get_stacked(())
+
+
+@pytest.mark.parametrize("capacity", [1, 2, 4])
+def test_opat_answers_unchanged_under_tiny_cache(setup, capacity):
+    """Eviction affects transfers, never correctness: capacities 1, 2, k."""
+    g, pg, cat, queries, _ = setup
+    eng = OPATEngine(pg, EngineConfig(cap=16384),
+                     store=PartitionStore(pg, capacity_parts=capacity))
+    for q in queries:
+        plan = generate_plan(q, g, cat)
+        res = eng.run(plan, MAX_SN, seed=1)
+        assert np.array_equal(np.unique(res.answers, axis=0),
+                              match_query(g, q, q_pad=8)), (q.name, capacity)
+
+
+def test_run_stats_carry_scheme_and_residency(setup):
+    """Satellite: the real scheme name (not '?') + cold/warm accounting in
+    every engine's RunStats."""
+    g, pg, cat, queries, _ = setup
+    opat = OPATEngine(pg, EngineConfig(cap=16384))
+    trad = TraditionalMPEngine(pg, 2, EngineConfig(cap=16384))
+    plan = generate_plan(queries[0], g, cat)
+    for eng in (opat, trad):
+        st = eng.run(plan, MAX_SN, seed=1).stats
+        assert st.scheme == "kway_shem"
+        assert st.cold_loads is not None and st.cold_loads > 0
+        assert st.warm_loads is not None and st.prefetch_hits is not None
+
+
+# ---------------------------------------------------------------------------
+# GraphSession serving API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_name", ["opat", "traditional", "mapreduce"])
+def test_session_submit_matches_fresh_engine(setup, engine_name):
+    """Acceptance: GraphSession.submit returns answers identical to a fresh
+    per-query engine run, for every engine and with/without a budget."""
+    g, pg, cat, queries, _ = setup
+    k = 1 if engine_name == "mapreduce" else 4   # 1 partition per device
+    sess = GraphSession(g, k=k, scheme="kway_shem", engine=engine_name,
+                        seed=1, processors=2, config=EngineConfig(cap=32768))
+    for q in queries:
+        got = sess.submit(q)
+        ref = match_query(g, q, q_pad=8)
+        assert np.array_equal(got.answers, ref), (engine_name, q.name)
+        assert got.n_answers == ref.shape[0]
+        # budgeted submit: min(K, total) unique real answers
+        rep = sess.submit(q, max_answers=2)
+        refset = {tuple(r) for r in ref}
+        assert rep.n_answers == min(2, ref.shape[0])
+        assert all(tuple(r) in refset for r in rep.answers)
+
+
+def test_session_warm_repeat_has_hits_and_fewer_cold_loads(setup):
+    """Acceptance: a repeated OPAT query on a warm session reports >= 1
+    cache hit and strictly fewer cold transfers than its first run."""
+    g, pg, cat, queries, _ = setup
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1)
+    q = next(q for q in queries if match_query(g, q, q_pad=8).shape[0] > 0)
+    first = sess.submit(q)
+    assert first.load_stats.cold_loads > 0     # cold session really transfers
+    second = sess.submit(q)
+    assert np.array_equal(first.answers, second.answers)
+    assert second.load_stats.hits >= 1
+    assert second.load_stats.cold_loads < first.load_stats.cold_loads
+    # the per-run RunStats agree with the session-level delta
+    st = second.reports[0].stats
+    assert st.warm_loads >= 1
+    assert st.cold_loads == second.load_stats.cold_loads
+
+
+def test_session_disjunctive_union_and_latency(setup):
+    g, pg, cat, queries, dqueries = setup
+    from repro.core.oracle import match_disjunctive
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1)
+    for dq in dqueries:
+        res = sess.submit(dq)
+        ref = match_disjunctive(g, dq, q_pad=8)
+        assert np.array_equal(res.answers, ref), dq.name
+        assert len(res.reports) == len(dq.disjuncts)
+        assert res.latency_s >= 0.0
+        assert res.n_loads == sum(s.n_loads for s in res.stats)
+
+
+def test_session_workload_profile_accumulates_and_persists(setup, tmp_path):
+    g, pg, cat, queries, dqueries = setup
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1)
+    for dq in dqueries:
+        sess.submit(dq)
+    prof = sess.workload_profile()
+    assert prof["queries_served"] == len(dqueries)
+    assert prof["scheme"] == "kway_shem" and prof["k"] == 4
+    assert len(prof["partitions"]) == 4
+    total_loads = sum(p["loads"] for p in prof["partitions"])
+    assert total_loads > 0
+    for p in prof["partitions"]:
+        assert 0.0 <= p["completion_rate"] <= 1.0
+    # every OPAT partition load is exactly one store get: cold + warm adds up
+    assert prof["cache"]["cold_loads"] + prof["cache"]["warm_loads"] == total_loads
+    path = tmp_path / "profile.json"
+    sess.save_profile(str(path))
+    assert json.loads(path.read_text())["queries_served"] == len(dqueries)
+
+
+def test_session_heuristic_override_and_validation(setup):
+    g, pg, cat, queries, _ = setup
+    with pytest.raises(ValueError):
+        GraphSession(g, engine="nope")
+    with pytest.raises(ValueError):
+        GraphSession(None)
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1)
+    q = queries[0]
+    ref = match_query(g, q, q_pad=8)
+    for h in ("max-sn", "min-sn", "max-yield"):
+        res = sess.submit(q, heuristic=h)
+        assert np.array_equal(res.answers, ref), h
+        assert all(s.heuristic == h for s in res.stats)
+
+
+def test_session_from_prebuilt_pg(setup):
+    """A session can adopt an existing PartitionedGraph + catalog."""
+    g, pg, cat, queries, _ = setup
+    sess = GraphSession(pg=pg, engine="opat", seed=1, catalog=cat)
+    assert sess.scheme == "kway_shem" and sess.k == 4
+    q = queries[0]
+    assert np.array_equal(sess.submit(q).answers, match_query(g, q, q_pad=8))
+
+
+def test_session_cache_capacity_bounds_residency(setup):
+    g, pg, cat, queries, _ = setup
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1,
+                        cache_parts=1)
+    for q in queries:
+        sess.submit(q)
+    assert len(sess.store.resident_keys()) == 1
+    assert sess.load_stats.evictions > 0
