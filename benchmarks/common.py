@@ -25,11 +25,15 @@ sys.path.insert(0, "src")
 
 from repro.core import (ALL_HEURISTICS, BUDGET_HEURISTICS, EngineConfig,
                         GraphSession, MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN,
-                        RunStats, SCHEMES, avg_load_ratio_across_schemes,
+                        RunStats, SCHEMES, answer_span_matrix,
+                        avg_load_ratio_across_schemes,
                         avg_load_ratio_for_batch, build_catalog,
+                        build_partitions, generate_plan, match_disjunctive,
+                        partition_graph, partition_quality,
                         total_connected_components)
 from repro.data.generators import (imdb_like_graph, imdb_queries,
-                                   subgen_like_graph, subgen_queries)
+                                   subgen_like_graph, subgen_queries,
+                                   waw_skewed_graph, waw_skewed_queries)
 
 K_PARTITIONS = 4   # the paper's experimental setting
 
@@ -163,6 +167,93 @@ def run_budget_sweep(workloads: Sequence[Workload],
                         heuristic, answers_requested=kk,
                         loads_saved_vs_full=saved))
     return BudgetSweepResult(stats=stats, wall_s=time.time() - t0)
+
+
+@dataclasses.dataclass
+class WawPhase:
+    """One serving phase of the before/after repartitioning comparison."""
+
+    scheme: str
+    stats: List[RunStats]
+    mean_loads: float          # mean partitions loaded per query
+    mean_span: float           # mean #partitions an answer's bindings hit
+    edge_cut: int              # unweighted cut of the phase's assignment
+    latency_s: float           # summed submit latency over the mix
+    n_answers: int
+
+
+@dataclasses.dataclass
+class WawSweepResult:
+    """Before/after workload-aware repartitioning on the same query mix."""
+
+    baseline: WawPhase
+    waw: WawPhase
+    answers_identical: bool    # same answer sets per query across phases
+    oracle_match: bool         # both phases match the whole-graph oracle
+    repartition_info: Dict
+    wall_s: float
+
+
+def run_waw_sweep(scheme: str = "kway_shem", k: int = 2,
+                  hot_repeats: int = 6, seed: int = 0, cap: int = 32768,
+                  engine: str = "opat") -> WawSweepResult:
+    """Close the WawPart loop on a skewed synthetic workload and measure
+    both sides: serve the mix on the baseline layout, feed the session's
+    own workload profile to ``GraphSession.repartition()``, serve the SAME
+    mix on the ``"waw"`` layout, and report loads-per-query, answer spans,
+    edge cut, and response time for each phase (plus oracle verification
+    that the answer sets are identical — repartitioning must never change
+    semantics, only placement)."""
+    t0 = time.time()
+    graph = waw_skewed_graph(seed=seed)
+    mix = waw_skewed_queries(hot_repeats)
+    sess = GraphSession(graph, k=k, scheme=scheme, engine=engine,
+                        config=EngineConfig(cap=cap), seed=seed)
+
+    def phase() -> Tuple[WawPhase, Dict[str, np.ndarray]]:
+        stats: List[RunStats] = []
+        answers: Dict[str, np.ndarray] = {}
+        span_sum, span_rows, latency = 0, 0, 0.0
+        for dq in mix:
+            res = sess.submit(dq)
+            stats.append(aggregate_disjuncts(res.stats, dq.name,
+                                             sess.scheme, sess.heuristic))
+            _, span = answer_span_matrix(sess.pg.owner, res.answers, sess.k)
+            span_sum += int(span.sum())
+            span_rows += int(span.shape[0])
+            latency += res.latency_s
+            answers[dq.name] = res.answers
+        cut = partition_quality(graph, sess.pg.assignment, sess.k)["cut"]
+        return WawPhase(
+            scheme=sess.scheme, stats=stats,
+            mean_loads=float(np.mean([s.n_loads for s in stats])),
+            mean_span=(span_sum / span_rows) if span_rows else 0.0,
+            edge_cut=cut, latency_s=latency,
+            n_answers=sum(s.n_answers for s in stats)), answers
+
+    # warm-up submit before each timed phase so the latency column compares
+    # layouts, not first-touch XLA compile/dispatch cost (the engine is
+    # rebuilt by repartition(), so each phase has its own fresh compile);
+    # the extra query only scales the profile's hot counts uniformly
+    sess.submit(mix[0])
+    base_phase, base_answers = phase()
+    info = sess.repartition()          # consumes the session's own profile
+    sess.submit(mix[0])
+    waw_phase, waw_answers = phase()
+
+    identical = all(
+        np.array_equal(base_answers[n], waw_answers[n]) for n in base_answers)
+    oracle_ok = True
+    for dq in mix:
+        ref = match_disjunctive(graph, dq,
+                                q_pad=base_answers[dq.name].shape[1])
+        oracle_ok &= np.array_equal(base_answers[dq.name], ref)
+        oracle_ok &= np.array_equal(waw_answers[dq.name], ref)
+    return WawSweepResult(baseline=base_phase, waw=waw_phase,
+                          answers_identical=identical,
+                          oracle_match=bool(oracle_ok),
+                          repartition_info=info,
+                          wall_s=time.time() - t0)
 
 
 def fmt_table(rows: List[List[str]], header: List[str]) -> str:

@@ -24,8 +24,8 @@ import numpy as np
 
 from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN,
                      RANDOM_SN, SCHEMES, BudgetSweepResult, SweepResult,
-                     fmt_table, avg_load_ratio_across_schemes,
-                     avg_load_ratio_for_batch)
+                     WawSweepResult, fmt_table,
+                     avg_load_ratio_across_schemes, avg_load_ratio_for_batch)
 
 
 def table3(sweep: SweepResult, out_dir: str) -> str:
@@ -115,6 +115,36 @@ def table_k_budget(budget: BudgetSweepResult, out_dir: str) -> str:
                                        for k in ks]
     _csv(os.path.join(out_dir, "table_k_budget.csv"), header, rows)
     return fmt_table(rows, header)
+
+
+def table_waw(waw: WawSweepResult, out_dir: str) -> str:
+    """Before/after workload-aware repartitioning on the same skewed query
+    mix (WawPart loop; edge-cut vs query-locality frame of Averbuch &
+    Neumann).  Loads-per-query and answer span are the query-locality
+    side; edge cut is the topology side — the point of the table is that
+    the ``"waw"`` layout improves the former without paying on the
+    latter, at identical (oracle-verified) answer sets."""
+    rows = []
+    for phase in (waw.baseline, waw.waw):
+        rows.append([
+            phase.scheme,
+            f"{phase.mean_loads:.2f}",
+            f"{phase.mean_span:.2f}",
+            phase.edge_cut,
+            f"{phase.latency_s*1000:.0f}",
+            phase.n_answers,
+        ])
+    header = ["scheme", "loads/query", "answer span", "edge cut",
+              "latency ms", "answers"]
+    _csv(os.path.join(out_dir, "table_waw.csv"), header, rows)
+    verdict = ("identical answer sets"
+               if waw.answers_identical else "ANSWER SETS DIFFER")
+    oracle = "oracle MATCH" if waw.oracle_match else "oracle MISMATCH"
+    return (fmt_table(rows, header)
+            + f"\n({verdict}, {oracle}; repartition round "
+              f"{waw.repartition_info['round']}, cut "
+              f"{waw.repartition_info['cut_before']} -> "
+              f"{waw.repartition_info['cut_after']})")
 
 
 def figs_loads(sweep: SweepResult, out_dir: str) -> str:

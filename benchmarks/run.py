@@ -30,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import mp_scaling, paper_tables, roofline
-    from .common import build_workloads, run_budget_sweep, run_sweep
+    from .common import (build_workloads, run_budget_sweep, run_sweep,
+                         run_waw_sweep)
 
     if not args.skip_sweep:
         scale = 600.0 if args.paper_scale else args.scale
@@ -68,6 +69,13 @@ def main() -> None:
         budget = run_budget_sweep(workloads, seed=args.seed)
         print(f"   {len(budget.stats)} budget runs in {budget.wall_s:.1f}s")
         print(paper_tables.table_k_budget(budget, args.out), "\n")
+
+        print("== Workload-aware repartitioning (WawPart loop, "
+              "baseline vs waw) ==")
+        waw = run_waw_sweep(seed=args.seed)
+        print(f"   2 phases x {len(waw.baseline.stats)} queries in "
+              f"{waw.wall_s:.1f}s")
+        print(paper_tables.table_waw(waw, args.out), "\n")
 
         print("== TraditionalMP / MapReduceMP scaling (Sec. 8-9) ==")
         print(mp_scaling.run(args.out, scale=args.scale, seed=args.seed), "\n")

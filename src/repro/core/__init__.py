@@ -15,6 +15,11 @@ Public API:
                                          many queries, shared residency and
                                          a per-partition workload profile
                                          (core/session.py)
+  repartition / RepartitionConfig      — workload-aware repartitioning: a
+                                         saved profile reweights the graph
+                                         and the multilevel partitioner
+                                         re-runs as scheme "waw"
+                                         (core/repartition.py)
   oracle.match_query                   — whole-graph ground truth
 """
 from .catalog import Catalog, build_catalog
@@ -33,6 +38,9 @@ from .partition import SCHEMES, PartitionScheme, partition_graph, partition_qual
 from .plan import Plan, PlanArrays, PlanStep, generate_plan
 from .query import (DisjunctiveQuery, Query, QueryEdge, QueryNode,
                     make_path_query, make_star_query)
+from .repartition import (WAW_SCHEME, RepartitionConfig, answer_span_matrix,
+                          load_profile, repartition, repartition_assignment,
+                          reweight_edges)
 from .runner import QueryRunner, RunReport, RunRequest, truncate_answers
 from .session import GraphSession, QueryResult
 from .state import BindingBatch, QueryState
@@ -53,6 +61,8 @@ __all__ = [
     "Plan", "PlanArrays", "PlanStep", "generate_plan",
     "DisjunctiveQuery", "Query", "QueryEdge", "QueryNode",
     "make_path_query", "make_star_query",
+    "WAW_SCHEME", "RepartitionConfig", "answer_span_matrix", "load_profile",
+    "repartition", "repartition_assignment", "reweight_edges",
     "BindingBatch", "QueryState",
     "LoadStats", "PartitionStore", "StoreEntry",
     "GraphSession", "QueryResult",

@@ -13,11 +13,12 @@ from (graph, scheme, k, engine, EngineConfig) and then serves repeated
   * it owns the catalog and the engine (one compile of the partition
     evaluator per session, reused across queries);
   * it accumulates a per-partition *workload profile* — loads, completed
-    vs spawned rows, completion rates, answers — that persists to JSON.
-    This is the observability hook WawPart-style workload-aware
-    repartitioning (ROADMAP item #2) consumes: hot query paths show up as
-    partitions with many loads and low completion rates, i.e. spanning
-    work the partitioner should co-locate.
+    vs spawned rows, completion rates, and the per-answer partition-span
+    matrix — that persists to JSON.  ``core/repartition.py`` consumes it:
+    hot query paths show up as partitions with many loads, low completion
+    rates, and heavy co-span pairs, i.e. spanning work the partitioner
+    should co-locate — and ``repartition()`` (below) closes that loop in
+    place, rebuilding the session against the workload-aware layout.
 
 ``submit(query, max_answers=K)`` accepts a conjunctive ``Query`` or a
 ``DisjunctiveQuery`` (per-disjunct plans, unioned answers; a budget K
@@ -105,33 +106,52 @@ class GraphSession:
                 raise ValueError("need a graph (or a pre-built pg)")
             assign = partition_graph(graph, k, scheme, seed=seed)
             pg = build_partitions(graph, assign, k, scheme=scheme)
-        self.pg = pg
         self.graph = pg.graph
-        self.scheme = pg.scheme
-        self.k = pg.k
         self.engine_name = engine
         self.heuristic = heuristic
         self.seed = seed
         self.config = config or EngineConfig()
         self.catalog = catalog if catalog is not None else build_catalog(self.graph)
-        self.store = PartitionStore(pg, capacity_parts=cache_parts,
-                                    capacity_bytes=cache_bytes)
+        # remembered so repartition() can rebuild the stack identically
+        self._cache_parts = cache_parts
+        self._cache_bytes = cache_bytes
+        self._processors = processors
+        self._prefetch = prefetch
+        self._mesh = mesh
+        self.repartitions = 0
+        self._bind(pg)
 
+    def _bind(self, pg: PartitionedGraph) -> None:
+        """(Re)build everything that depends on the vertex assignment: the
+        store (so no stale single-partition entry or stacked bundle from an
+        older layout can ever be served), the engine (its compiled
+        evaluator is shaped by the new padding geometry and it must point
+        at the new store), and the per-partition profile counters (old pids
+        name different vertex sets, so old counts are not observations of
+        the new layout)."""
+        self.pg = pg
+        self.scheme = pg.scheme
+        self.k = pg.k
+        self.store = PartitionStore(pg, capacity_parts=self._cache_parts,
+                                    capacity_bytes=self._cache_bytes)
+        engine = self.engine_name
         if engine == "opat":
             from .opat import OPATEngine
             self.engine: QueryRunner = OPATEngine(
-                pg, self.config, store=self.store, prefetch=prefetch)
+                pg, self.config, store=self.store, prefetch=self._prefetch)
         elif engine == "traditional":
             from .traditional_mp import TraditionalMPEngine
             self.engine = TraditionalMPEngine(
-                pg, processors, self.config, store=self.store)
+                pg, self._processors, self.config, store=self.store)
         else:
             from ..compat import make_part_mesh
             from .mapreduce_mp import MapReduceMPEngine
+            mesh = self._mesh
             if mesh is None:
                 mesh = make_part_mesh(pg.k)
             self.engine = MapReduceMPEngine(
-                pg, mesh, self.config, heuristic=heuristic, store=self.store)
+                pg, mesh, self.config, heuristic=self.heuristic,
+                store=self.store)
 
         # per-partition workload profile, accumulated across submits.
         # MapReduceMP runs as one compiled program with no host loop, so it
@@ -141,6 +161,14 @@ class GraphSession:
         self._loads = np.zeros(self.k, dtype=np.int64)
         self._completed = np.zeros(self.k, dtype=np.int64)
         self._spawned = np.zeros(self.k, dtype=np.int64)
+        # answer-span observations (host-side, engine-independent): how many
+        # answer rows bound vertices in both p and q, and how often each
+        # vertex was bound in a partition-spanning answer — the co-traversal
+        # signals core/repartition.py reweights boundary edges with
+        self._cospan = np.zeros((self.k, self.k), dtype=np.int64)
+        self._vertex_span = np.zeros(self.graph.n_nodes, dtype=np.int64)
+        self._span_sum = 0
+        self._span_rows = 0
         self._queries_served = 0
         self._answers_served = 0
 
@@ -172,12 +200,13 @@ class GraphSession:
             answers = a if answers is None else np.unique(
                 np.concatenate([answers, a]), axis=0)
         latency = time.time() - t0
-        self._absorb(reports, int(answers.shape[0]))
+        self._absorb(reports, answers)
         return QueryResult(name=query.name, answers=answers, reports=reports,
                            latency_s=latency,
                            load_stats=self.store.stats - stats0)
 
-    def _absorb(self, reports: List[RunReport], n_answers: int) -> None:
+    def _absorb(self, reports: List[RunReport], answers: np.ndarray) -> None:
+        from .repartition import answer_span_matrix
         for rep in reports:
             for pid in rep.stats.loads:
                 self._loads[pid] += 1
@@ -185,8 +214,16 @@ class GraphSession:
             if st is not None:     # OPAT / TraditionalMP expose QueryState
                 self._completed += st.completed_from
                 self._spawned += st.spawned_from
+        pairs, span = answer_span_matrix(self.pg.owner, answers, self.k)
+        self._cospan += pairs
+        spanning = answers[span >= 2]
+        if spanning.size:
+            ids = spanning[spanning >= 0]
+            np.add.at(self._vertex_span, ids, 1)
+        self._span_sum += int(span.sum())
+        self._span_rows += int(span.shape[0])
         self._queries_served += 1
-        self._answers_served += n_answers
+        self._answers_served += int(answers.shape[0])
 
     # -- observability -----------------------------------------------------
 
@@ -197,12 +234,17 @@ class GraphSession:
 
     def workload_profile(self) -> Dict[str, Any]:
         """Per-partition load/yield/completion-rate profile of everything
-        this session served — the input a workload-aware repartitioner
-        (WawPart, arXiv:2203.14888) feeds on.
+        this session served, plus the answer-span (co-traversal) matrix and
+        the assignment it was observed under — exactly what
+        ``core/repartition.py`` consumes to produce the ``"waw"`` layout
+        (WawPart, arXiv:2203.14888), and what ``launch/serve.py --json``
+        embeds for CI.
 
         ``partition_counters_observed`` is False for MapReduceMP (no host
-        loop, so per-partition counters are structurally zero and a
-        repartitioner must not treat them as measurements).
+        loop, so per-partition load/yield counters are structurally zero
+        and the repartitioner skips its split-pressure term); the
+        ``answer_spans`` block is observed host-side from the answers and
+        is valid for every engine.
         """
         partitions = []
         for p in range(self.k):
@@ -225,11 +267,56 @@ class GraphSession:
             "queries_served": self._queries_served,
             "answers_served": self._answers_served,
             "partitions": partitions,
+            "answer_spans": {
+                "answers_observed": self._span_rows,
+                "mean_span": (self._span_sum / self._span_rows
+                              if self._span_rows else 0.0),
+                "pair_counts": self._cospan.tolist(),
+                # per-vertex: #spanning answers (span >= 2) binding it; the
+                # edge-level co-traversal signal for reweight_edges
+                "vertex_span_counts": self._vertex_span.tolist(),
+            },
+            # the [V] assignment the counters refer to, so a saved profile
+            # is self-contained for repartition_assignment()
+            "assignment": self.pg.assignment.astype(int).tolist(),
             "cache": self.store.stats.to_dict(),
         }
 
     def save_profile(self, path: str) -> None:
-        """Persist ``workload_profile()`` as JSON (the repartitioner/CI
-        artifact format)."""
+        """Persist ``workload_profile()`` as JSON — the self-contained
+        input of ``core/repartition.py`` (and the CI serve artifact)."""
         with open(path, "w") as f:
             json.dump(self.workload_profile(), f, indent=2)
+
+    # -- the WawPart loop --------------------------------------------------
+
+    def repartition(self, profile: Optional[Any] = None, *,
+                    seed: Optional[int] = None,
+                    config: Optional[Any] = None) -> Dict[str, Any]:
+        """Re-layout the graph from observed traffic and rebind the session.
+
+        ``profile`` is a ``workload_profile()`` dict or a
+        ``save_profile()`` JSON path; None uses everything this session has
+        served so far.  The store, compiled evaluators, and engine are
+        rebuilt against the new assignment — cached single-partition
+        entries and stacked bundles of the old layout are all invalidated
+        (their pids/paddings no longer mean the same thing) — and the
+        profile counters restart from zero for the new layout.  The graph,
+        catalog, engine choice, cache capacities, and k are unchanged.
+
+        Returns a summary dict: scheme/cut before and after, k, and which
+        repartition round this is (``GraphSession.repartitions``).
+        """
+        from .partition import partition_quality
+        from .repartition import RepartitionConfig, repartition as _repart
+        prof = profile if profile is not None else self.workload_profile()
+        cfg = config if config is not None else RepartitionConfig()
+        before = partition_quality(self.graph, self.pg.assignment, self.k)
+        new_pg = _repart(self.pg, prof, seed=seed, config=cfg)
+        self._bind(new_pg)
+        self.repartitions += 1
+        after = partition_quality(self.graph, new_pg.assignment, self.k)
+        return {"round": self.repartitions, "k": self.k,
+                "scheme": self.scheme,
+                "cut_before": before["cut"], "cut_after": after["cut"],
+                "imbalance_after": after["imbalance"]}

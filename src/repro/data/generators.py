@@ -169,6 +169,87 @@ def subgen_like_graph(n_nodes: int = 2000, n_edges: int = 6000,
     return b.build()
 
 
+def waw_skewed_graph(n_left: int = 400, n_right: int = 440,
+                     intra_edges: int = 1500, bridge_edges: int = 8,
+                     n_instances: int = 12, n_cold_pairs: int = 8,
+                     seed: int = 0) -> Graph:
+    """Skewed-workload benchmark graph for workload-aware repartitioning.
+
+    Two dense background communities ("left"/"right") joined by a few
+    bridge edges, so every balanced min cut separates the communities.
+    ``n_instances`` hot template instances (the Subgen template of
+    ``TEMPLATE_LABELS``) deliberately STRADDLE that cut: A, C, D are
+    anchored into the left community (one anchor edge each) and B into the
+    right (three anchors), so splitting an instance (cutting its three
+    template edges) costs exactly as much as co-locating it (cutting three
+    anchors) — a topology-only partitioner is indifferent and, with
+    anchors inserted first in adjacency order, dissolves each instance
+    into its anchor communities, leaving every hot answer spanning two
+    partitions.  Only the observed workload can break the tie: a profile
+    of template queries pulls the template edges' weights up and the
+    repartitioner co-locates each instance without raising the edge cut.
+
+    ``n_cold_pairs`` plants cold 2-node patterns (``cold_A -e_cold->
+    cold_B``) wholly inside the left community — the rarely-queried
+    control that must not regress — and also balances the communities'
+    node counts (left gains 3 nodes per instance + 2 per cold pair, right
+    gains 1 + the pre-sized surplus).
+    """
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder()
+    left = [b.add_node(f"bgL{int(rng.integers(0, 20))}") for _ in range(n_left)]
+    right = [b.add_node(f"bgR{int(rng.integers(0, 20))}") for _ in range(n_right)]
+    for side in (left, right):
+        for _ in range(intra_edges):
+            s, d = rng.choice(len(side), size=2, replace=False)
+            b.add_edge(side[int(s)], side[int(d)],
+                       f"e{int(rng.integers(0, 30))}")
+    for _ in range(bridge_edges):
+        b.add_edge(left[int(rng.integers(0, n_left))],
+                   right[int(rng.integers(0, n_right))], "e_bridge")
+    # hot template instances straddling the communities.  Anchor edges are
+    # added BEFORE template edges so they come first in each instance
+    # node's adjacency: the partitioner's tie-breaking (sorted heavy-edge
+    # matching takes the first heaviest neighbour) then contracts instance
+    # nodes into their anchor communities, i.e. the baseline splits them.
+    for _ in range(n_instances):
+        ids = [b.add_node(l) for l in TEMPLATE_LABELS]
+        a, bb, c, d = ids
+        b.add_edge(a, left[int(rng.integers(0, n_left))], "anchor")
+        b.add_edge(c, left[int(rng.integers(0, n_left))], "anchor")
+        b.add_edge(d, left[int(rng.integers(0, n_left))], "anchor")
+        for _ in range(3):
+            b.add_edge(bb, right[int(rng.integers(0, n_right))], "anchor")
+        for el, s, t in TEMPLATE_EDGES:
+            b.add_edge(ids[s], ids[t], el)
+    # cold pairs wholly inside the left community
+    for _ in range(n_cold_pairs):
+        ca = b.add_node("cold_A")
+        cb = b.add_node("cold_B")
+        b.add_edge(ca, left[int(rng.integers(0, n_left))], "anchor")
+        b.add_edge(cb, left[int(rng.integers(0, n_left))], "anchor")
+        b.add_edge(ca, cb, "e_cold")
+    return b.build()
+
+
+def waw_skewed_queries(hot_repeats: int = 6) -> List[DisjunctiveQuery]:
+    """The skewed query mix for ``waw_skewed_graph``: the hot template
+    query repeated ``hot_repeats`` times (the traffic the repartitioner
+    should optimise for) plus one cold within-community query (the control
+    that must stay cheap)."""
+    hot = Query(name="HOT", nodes=[
+        QueryNode(label=l) for l in TEMPLATE_LABELS],
+        edges=[QueryEdge(0, 1, "e_ab"), QueryEdge(1, 2, "e_bc"),
+               QueryEdge(1, 3, "e_bd")])
+    cold = Query(name="COLD", nodes=[
+        QueryNode(label="cold_A"), QueryNode(label="cold_B")],
+        edges=[QueryEdge(0, 1, "e_cold")])
+    mix = [DisjunctiveQuery([hot], name=f"HOT{i+1}")
+           for i in range(hot_repeats)]
+    mix.append(DisjunctiveQuery([cold], name="COLD"))
+    return mix
+
+
 def subgen_queries(graph: Graph) -> List[DisjunctiveQuery]:
     """Q4 — subgraph of the embedded template; Q5 — the template itself;
     Q6 — pattern only partially present (2 nodes + 1 edge exist)."""

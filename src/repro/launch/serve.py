@@ -9,7 +9,14 @@ strategies (OPAT / TraditionalMP / MapReduceMP).  Reported per query: the
 paper's metrics (partition-load sequences, load ratios vs L_ideal, answer
 counts, latency) plus the store's cold/warm/prefetch split; the ``--json``
 report additionally carries the session's cache counters and per-partition
-workload profile (the WawPart-style repartitioning input).
+workload profile (the input of core/repartition.py).
+
+The WawPart loop end to end: serve once with ``--profile-json p.json``,
+then serve the same dataset/flags with ``--repartition-from p.json`` — the
+session re-lays the graph out from the observed traffic (scheme ``"waw"``)
+before serving, and ``--verify`` proves answers are unchanged.  The
+profile embeds the assignment it was observed under, so both runs must
+name the same dataset/scale/seed (the assignment length is validated).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset imdb --k 4 \
         --scheme ecosocial --engine opat --heuristic max-sn \
@@ -79,6 +86,11 @@ def main() -> None:
     ap.add_argument("--json", default="", help="write a JSON report here")
     ap.add_argument("--profile-json", default="",
                     help="also write the workload profile alone here")
+    ap.add_argument("--repartition-from", default="", metavar="PROFILE.json",
+                    help="workload-aware repartitioning: before serving, "
+                         "feed this saved workload profile (from a previous "
+                         "run's --profile-json) to GraphSession.repartition()"
+                         " and serve against the improved 'waw' layout")
     args = ap.parse_args()
 
     graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
@@ -99,6 +111,15 @@ def main() -> None:
           f"total_cc={total_connected_components(session.pg)} "
           f"cache_parts={args.cache_parts or 'unbounded'} "
           f"[{time.time()-t0:.1f}s]")
+
+    if args.repartition_from:
+        info = session.repartition(args.repartition_from)
+        q = partition_quality(graph, session.pg.assignment, session.k)
+        print(f"[serve] repartitioned from {args.repartition_from}: "
+              f"scheme={session.scheme} cut {info['cut_before']} -> "
+              f"{info['cut_after']} ({q['cut_frac']:.1%}) "
+              f"sizes={q['sizes']} "
+              f"total_cc={total_connected_components(session.pg)}")
 
     records = []
     mismatches = 0
@@ -150,14 +171,19 @@ def main() -> None:
           f"({cache['prefetch_hits']} hit), "
           f"{cache['bytes_cold']} cold bytes")
 
-    if args.json:
-        report = {"queries": records,
-                  "cache": cache,
-                  "workload_profile": session.workload_profile()}
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=2)
-    if args.profile_json:
-        session.save_profile(args.profile_json)
+    if args.json or args.profile_json:
+        # built once: the profile embeds two [V]-length arrays, so don't
+        # materialize/serialize it separately per output file
+        profile = session.workload_profile()
+        if args.json:
+            report = {"queries": records,
+                      "cache": cache,
+                      "workload_profile": profile}
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+        if args.profile_json:
+            with open(args.profile_json, "w") as f:
+                json.dump(profile, f, indent=2)
     if mismatches:   # --verify is a gate (CI runs this): fail on MISMATCH
         sys.exit(f"[serve] {mismatches} quer{'y' if mismatches == 1 else 'ies'} "
                  f"MISMATCHED the oracle")

@@ -1,0 +1,37 @@
+"""Docs exist and contain no dead relative links (ISSUE-3 acceptance:
+README + both docs pages present, zero dead links — the same check CI
+runs via tools/check_links.py)."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_links import find_dead_links  # noqa: E402
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/architecture.md", "docs/serving.md"):
+        assert (REPO / rel).is_file(), f"{rel} is missing"
+
+
+def test_no_dead_relative_links():
+    dead = find_dead_links([str(REPO / "README.md"), str(REPO / "docs")],
+                           root=REPO)
+    assert dead == [], f"dead relative links: {dead}"
+
+
+def test_checker_catches_dead_links(tmp_path):
+    good = tmp_path / "real.md"
+    good.write_text("ok")
+    md = tmp_path / "page.md"
+    md.write_text("[ok](real.md) [anchor](#x) [ext](https://x.y/z) "
+                  "[dead](missing.md) [deep](sub/nope.md) "
+                  "[rootdead](/no/such/file.md)")
+    dead = find_dead_links([str(tmp_path)], root=tmp_path)
+    assert len(dead) == 3
+    assert any("missing.md" in d for d in dead)
+    assert any("/no/such/file.md" in d for d in dead)
+    # a root-absolute link is alive when it resolves under the given root
+    (tmp_path / "page2.md").write_text("[rootok](/real.md)")
+    assert find_dead_links([str(tmp_path / "page2.md")], root=tmp_path) == []

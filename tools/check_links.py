@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs link check: fail on dead *relative* links in markdown files.
+
+    python tools/check_links.py [FILE_OR_DIR ...]
+
+Defaults to README.md + docs/.  External links (any scheme://, mailto:)
+and pure in-page anchors (#...) are out of scope — this is the CI gate
+that README/docs never point at files that do not exist in the checkout.
+Directories are scanned recursively for *.md.  Leading-"/" targets are
+treated as repo-root-absolute (GitHub style) and resolved against the
+working directory, so run this from the repo root.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List
+
+# [text](target) — target up to the first unescaped closing paren/space
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SCHEME_RE = re.compile(r"^[A-Za-z][A-Za-z0-9+.-]*:")
+
+
+def find_dead_links(paths: Iterable[str],
+                    root: Path | None = None) -> List[str]:
+    """``root`` anchors leading-"/" (repo-root-absolute) link targets;
+    defaults to the working directory for CLI use — pass it explicitly
+    when the caller's cwd is not the repo root."""
+    root = Path.cwd() if root is None else Path(root)
+    files: List[Path] = []
+    for p in (Path(p) for p in paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    dead: List[str] = []
+    for f in files:
+        if not f.exists():
+            dead.append(f"{f}: (file itself is missing)")
+            continue
+        for m in _LINK_RE.finditer(f.read_text()):
+            target = m.group(1)
+            if _SCHEME_RE.match(target) or target.startswith("#"):
+                continue                       # external / in-page anchor
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if rel.startswith("/"):
+                # GitHub-style repo-root-absolute link
+                resolved = root / rel.lstrip("/")
+            else:
+                resolved = f.parent / rel
+            if not resolved.exists():
+                dead.append(f"{f}: {target}")
+    return dead
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    dead = find_dead_links(paths)
+    if dead:
+        print(f"{len(dead)} dead relative link(s):")
+        for d in dead:
+            print(f"  {d}")
+        return 1
+    print(f"link check OK ({', '.join(paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
