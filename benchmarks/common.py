@@ -24,9 +24,9 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import (ALL_HEURISTICS, BUDGET_HEURISTICS, EngineConfig,
-                        GraphSession, MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN,
-                        RunStats, SCHEMES, answer_span_matrix,
-                        avg_load_ratio_across_schemes,
+                        GraphSession, MAX_SN, MAX_YIELD, MAX_YIELD_SHARED,
+                        MIN_SN, RANDOM_SN, RunStats, SCHEMES,
+                        answer_span_matrix, avg_load_ratio_across_schemes,
                         avg_load_ratio_for_batch, build_catalog,
                         build_partitions, generate_plan, match_disjunctive,
                         partition_graph, partition_quality,
@@ -254,6 +254,134 @@ def run_waw_sweep(scheme: str = "kway_shem", k: int = 2,
                           oracle_match=bool(oracle_ok),
                           repartition_info=info,
                           wall_s=time.time() - t0)
+
+
+@dataclasses.dataclass
+class SharedPhase:
+    """One (batch size, serving mode) cell of the shared-vs-isolated
+    throughput comparison."""
+
+    mode: str              # "isolated" | "shared"
+    batch: int             # #queries served together
+    n_loads: int           # engine-level partition loads (workload level
+                           # for shared: one batched load counts once)
+    cold_loads: int        # store transfers paid on the critical path
+    warm_loads: int
+    loads_per_query: float
+    p50_ms: float
+    p95_ms: float
+    qps: float             # queries per second over the phase wall clock
+    wall_s: float
+    n_answers: int
+
+
+@dataclasses.dataclass
+class SharedSweepResult:
+    """Isolated vs shared serving of the same overlapping query batches."""
+
+    phases: List[SharedPhase]      # two per batch size: isolated, shared
+    answers_identical: bool        # per-query answers equal across modes
+    oracle_match: bool             # both modes match the whole-graph oracle
+    wall_s: float
+
+    def phase(self, batch: int, mode: str) -> SharedPhase:
+        return next(p for p in self.phases
+                    if p.batch == batch and p.mode == mode)
+
+
+def _pct(vals: List[float], q: float) -> float:
+    """Latency percentile in [0, 1] (0.0 for an empty sample)."""
+    return float(np.percentile(vals, q * 100)) if vals else 0.0
+
+
+def run_shared_sweep(batch_sizes: Sequence[int] = (2, 4, 8),
+                     scheme: str = "kway_shem", k: int = K_PARTITIONS,
+                     seed: int = 0, cap: int = 32768,
+                     heuristic: str = MAX_YIELD_SHARED) -> SharedSweepResult:
+    """The QueryScheduler's throughput claim, measured: serve batches of
+    overlapping queries (the skewed WawPart workload: B-1 hot template
+    queries + 1 cold control) in two modes —
+
+      isolated — one query at a time with the store cleared before each,
+                 the no-residency-sharing baseline (every partition a
+                 query touches is a cold transfer, as if each query ran in
+                 its own session);
+      shared   — the whole batch through ``GraphSession.submit_many``:
+                 workload-level load ordering, one batched evaluation per
+                 load, budgets/retirement per query.
+
+    Reports loads-per-query, cold/warm split, latency percentiles, and
+    queries/sec per (batch, mode), and verifies per-query answers are
+    identical across modes and match the whole-graph oracle.  Each mode is
+    warmed up (compile + first-touch) before its timed phase so the table
+    compares serving, not XLA tracing."""
+    t0 = time.time()
+    graph = waw_skewed_graph(seed=seed)
+    phases: List[SharedPhase] = []
+    identical = True
+    oracle_ok = True
+    for B in batch_sizes:
+        assert B >= 2, "need at least 2 queries to share anything"
+        mix = waw_skewed_queries(hot_repeats=B - 1)  # B-1 hot + 1 cold
+        assert len(mix) == B
+        refs = {dq.name: match_disjunctive(graph, dq, q_pad=8) for dq in mix}
+
+        # -- isolated: store cleared before every query ---------------------
+        sess = GraphSession(graph, k=k, scheme=scheme, engine="opat",
+                            config=EngineConfig(cap=cap), seed=seed)
+        # warm-up compile for BOTH plan shapes in the mix (the jit cache
+        # keys on the plan geometry: all HOT queries share one trace, the
+        # COLD control has its own)
+        sess.submit(mix[0])
+        sess.submit(mix[-1])
+        lat: List[float] = []
+        iso_answers: Dict[str, np.ndarray] = {}
+        stats0 = sess.load_stats.copy()
+        n_loads = 0
+        wall0 = time.time()
+        for dq in mix:
+            sess.store.clear()                   # no residency sharing
+            res = sess.submit(dq)
+            lat.append(res.latency_s)
+            n_loads += res.n_loads
+            iso_answers[dq.name] = res.answers
+        wall = time.time() - wall0
+        delta = sess.load_stats - stats0
+        lat.sort()
+        phases.append(SharedPhase(
+            mode="isolated", batch=B, n_loads=n_loads,
+            cold_loads=delta.cold_loads, warm_loads=delta.warm_loads,
+            loads_per_query=n_loads / B,
+            p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            qps=B / wall if wall else 0.0, wall_s=wall,
+            n_answers=sum(a.shape[0] for a in iso_answers.values())))
+
+        # -- shared: the whole batch through the scheduler ------------------
+        sess = GraphSession(graph, k=k, scheme=scheme, engine="opat",
+                            config=EngineConfig(cap=cap), seed=seed)
+        sess.submit_many(mix, heuristic=heuristic)   # warm-up (all buckets)
+        sess.store.clear()
+        report = sess.submit_many(mix, heuristic=heuristic)
+        lat = sorted(r.latency_s for r in report.results)
+        sh_answers = {r.name: r.answers for r in report.results}
+        phases.append(SharedPhase(
+            mode="shared", batch=B, n_loads=report.n_loads,
+            cold_loads=report.load_stats.cold_loads,
+            warm_loads=report.load_stats.warm_loads,
+            loads_per_query=report.loads_per_query,
+            p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            qps=B / report.wall_s if report.wall_s else 0.0,
+            wall_s=report.wall_s,
+            n_answers=sum(a.shape[0] for a in sh_answers.values())))
+
+        for dq in mix:
+            identical &= np.array_equal(iso_answers[dq.name],
+                                        sh_answers[dq.name])
+            oracle_ok &= np.array_equal(iso_answers[dq.name], refs[dq.name])
+            oracle_ok &= np.array_equal(sh_answers[dq.name], refs[dq.name])
+    return SharedSweepResult(phases=phases, answers_identical=identical,
+                             oracle_match=bool(oracle_ok),
+                             wall_s=time.time() - t0)
 
 
 def fmt_table(rows: List[List[str]], header: List[str]) -> str:

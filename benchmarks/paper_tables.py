@@ -23,8 +23,8 @@ from typing import Dict, List
 import numpy as np
 
 from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN,
-                     RANDOM_SN, SCHEMES, BudgetSweepResult, SweepResult,
-                     WawSweepResult, fmt_table,
+                     RANDOM_SN, SCHEMES, BudgetSweepResult, SharedSweepResult,
+                     SweepResult, WawSweepResult, fmt_table,
                      avg_load_ratio_across_schemes, avg_load_ratio_for_batch)
 
 
@@ -145,6 +145,31 @@ def table_waw(waw: WawSweepResult, out_dir: str) -> str:
               f"{waw.repartition_info['round']}, cut "
               f"{waw.repartition_info['cut_before']} -> "
               f"{waw.repartition_info['cut_after']})")
+
+
+def table_shared(shared: SharedSweepResult, out_dir: str) -> str:
+    """Isolated vs shared serving of the same overlapping query batches
+    (QueryScheduler, core/scheduler.py).  Loads-per-query and the
+    cold-load column are the amortization story — one device-resident
+    partition advancing B pending queries in a single batched evaluation
+    — and queries/sec is what that buys at the workload level; per-query
+    answers are verified identical across modes (and vs the oracle), so
+    the speedup never changes semantics."""
+    rows = []
+    for p in shared.phases:
+        rows.append([
+            p.batch, p.mode, p.n_loads, f"{p.loads_per_query:.2f}",
+            p.cold_loads, p.warm_loads,
+            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}",
+            f"{p.qps:.1f}", p.n_answers,
+        ])
+    header = ["batch", "mode", "loads", "loads/query", "cold", "warm",
+              "p50 ms", "p95 ms", "q/s", "answers"]
+    _csv(os.path.join(out_dir, "table_shared.csv"), header, rows)
+    verdict = ("identical answer sets"
+               if shared.answers_identical else "ANSWER SETS DIFFER")
+    oracle = "oracle MATCH" if shared.oracle_match else "oracle MISMATCH"
+    return fmt_table(rows, header) + f"\n({verdict}, {oracle})"
 
 
 def figs_loads(sweep: SweepResult, out_dir: str) -> str:

@@ -26,12 +26,26 @@ def main() -> None:
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--skip-sweep", action="store_true",
                     help="only print the roofline report")
+    ap.add_argument("--shared-smoke", action="store_true",
+                    help="only run the shared-vs-isolated scheduler sweep "
+                         "(small batches; the CI throughput smoke)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from . import mp_scaling, paper_tables, roofline
-    from .common import (build_workloads, run_budget_sweep, run_sweep,
-                         run_waw_sweep)
+    from .common import (build_workloads, run_budget_sweep, run_shared_sweep,
+                         run_sweep, run_waw_sweep)
+
+    if args.shared_smoke:
+        print("== Shared-load scheduling (QueryScheduler, isolated vs "
+              "shared) ==", flush=True)
+        shared = run_shared_sweep(batch_sizes=(2, 8), seed=args.seed)
+        print(f"   {len(shared.phases)} phases in {shared.wall_s:.1f}s")
+        print(paper_tables.table_shared(shared, args.out))
+        if not (shared.answers_identical and shared.oracle_match):
+            sys.exit("shared-smoke: answer sets differ across modes or "
+                     "mismatch the oracle")   # a real CI gate, like serve
+        return
 
     if not args.skip_sweep:
         scale = 600.0 if args.paper_scale else args.scale
@@ -76,6 +90,12 @@ def main() -> None:
         print(f"   2 phases x {len(waw.baseline.stats)} queries in "
               f"{waw.wall_s:.1f}s")
         print(paper_tables.table_waw(waw, args.out), "\n")
+
+        print("== Shared-load scheduling (QueryScheduler, isolated vs "
+              "shared) ==")
+        shared = run_shared_sweep(seed=args.seed)
+        print(f"   {len(shared.phases)} phases in {shared.wall_s:.1f}s")
+        print(paper_tables.table_shared(shared, args.out), "\n")
 
         print("== TraditionalMP / MapReduceMP scaling (Sec. 8-9) ==")
         print(mp_scaling.run(args.out, scale=args.scale, seed=args.seed), "\n")

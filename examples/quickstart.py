@@ -76,7 +76,19 @@ print(f"top-1: {top1.n_answers} answer in {top1.stats[0].n_loads} loads "
       f"(full run took {stats.n_loads})")
 assert tuple(top1.answers[0]) in {tuple(r) for r in ref}
 
-# 8. the session remembers what it served: a per-partition workload profile
+# 8. a BATCH of concurrent queries: submit_many routes them through the
+#    shared-load QueryScheduler (docs/scheduler.md) — every partition load
+#    advances all queries waiting on it in one batched compiled call, and
+#    each query retires on its own budget
+batch = [Query(name=f"demo{i}", nodes=query.nodes, edges=query.edges)
+         for i in range(4)]
+report = session.submit_many(batch, max_answers=2)
+print(f"batch: {len(report.results)} queries in {report.n_loads} workload "
+      f"loads ({report.loads_per_query:.2f}/query, batch sizes "
+      f"{report.batch_sizes})")
+assert all(r.n_answers == min(2, ref.shape[0]) for r in report.results)
+
+# 9. the session remembers what it served: a per-partition workload profile
 #    (loads / completed / spawned / completion rate) that a workload-aware
 #    repartitioner can consume, persisted as JSON via save_profile(path)
 prof = session.workload_profile()

@@ -15,6 +15,12 @@ Public API:
                                          many queries, shared residency and
                                          a per-partition workload profile
                                          (core/session.py)
+  QueryScheduler / ScheduleReport      — shared-load multi-query serving:
+                                         workload-level load ordering
+                                         (MAX-YIELD-SHARED) with batched
+                                         partition evaluation and per-query
+                                         budget retirement
+                                         (core/scheduler.py)
   repartition / RepartitionConfig      — workload-aware repartitioning: a
                                          saved profile reweights the graph
                                          and the multilevel partitioner
@@ -27,8 +33,9 @@ from .engine import EngineConfig, make_partition_evaluator
 from .graph import (Graph, GraphBuilder, LabelVocab, PartitionArrays,
                     PartitionedGraph, WILDCARD, build_partitions)
 from .heuristics import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MAX_YIELD,
-                         MIN_SN, RANDOM_SN, choose_partition, choose_top_p,
-                         rank_partitions)
+                         MAX_YIELD_SHARED, MIN_SN, RANDOM_SN,
+                         SHARED_HEURISTICS, choose_partition, choose_top_p,
+                         rank_partitions, rank_partitions_shared)
 from .metrics import (RunStats, avg_load_ratio_across_schemes,
                       avg_load_ratio_for_batch, l_ideal_for_plan,
                       total_connected_components)
@@ -42,6 +49,7 @@ from .repartition import (WAW_SCHEME, RepartitionConfig, answer_span_matrix,
                           load_profile, repartition, repartition_assignment,
                           reweight_edges)
 from .runner import QueryRunner, RunReport, RunRequest, truncate_answers
+from .scheduler import QueryScheduler, ScheduleReport, batch_bucket
 from .session import GraphSession, QueryResult
 from .state import BindingBatch, QueryState
 from .store import LoadStats, PartitionStore, StoreEntry
@@ -51,8 +59,10 @@ __all__ = [
     "Catalog", "build_catalog", "EngineConfig", "make_partition_evaluator",
     "Graph", "GraphBuilder", "LabelVocab", "PartitionArrays",
     "PartitionedGraph", "WILDCARD", "build_partitions",
-    "ALL_HEURISTICS", "BUDGET_HEURISTICS", "MAX_SN", "MAX_YIELD", "MIN_SN",
-    "RANDOM_SN", "choose_partition", "choose_top_p", "rank_partitions",
+    "ALL_HEURISTICS", "BUDGET_HEURISTICS", "MAX_SN", "MAX_YIELD",
+    "MAX_YIELD_SHARED", "MIN_SN", "RANDOM_SN", "SHARED_HEURISTICS",
+    "choose_partition", "choose_top_p", "rank_partitions",
+    "rank_partitions_shared",
     "QueryRunner", "RunReport", "RunRequest", "truncate_answers",
     "RunStats", "avg_load_ratio_across_schemes", "avg_load_ratio_for_batch",
     "l_ideal_for_plan", "total_connected_components",
@@ -66,5 +76,6 @@ __all__ = [
     "BindingBatch", "QueryState",
     "LoadStats", "PartitionStore", "StoreEntry",
     "GraphSession", "QueryResult",
+    "QueryScheduler", "ScheduleReport", "batch_bucket",
     "TraditionalMPEngine", "TraditionalMPResult",
 ]

@@ -1,4 +1,4 @@
-"""Partition-choice heuristics (paper Sec. 5, plus a budget-aware one).
+"""Partition-choice heuristics (paper Sec. 5, plus budget/workload-aware).
 
 MAX-SN   : load the eligible partition with the most start/continuation
            nodes (greedy; the paper's best performer).
@@ -14,12 +14,21 @@ MAX-YIELD: budget-aware (answer-budget runs, ``max_answers=K``): rank by
            ones that merely fan out spanning work; with no observations or
            K=inf it degrades gracefully toward MAX-SN.
 
+MAX-YIELD-SHARED generalizes the per-query ranking to a *workload*: the
+``QueryScheduler`` (core/scheduler.py) has many queries pending at once,
+and one device-resident partition can advance all of them.
+``rank_partitions_shared`` therefore scores each candidate partition by
+the total expected yield summed over every pending query that needs it —
+Σ_q SNI_q(p) × completion_rate_q(p) — so one cold load services many
+queries.  Summing plain SNI (heuristic MAX-SN) is the throughput-greedy
+variant with no yield signal.
+
 Ties are resolved randomly, as in the paper.  The same functions order the
 top-p set for TraditionalMP / MapReduceMP (Sec. 8.1 line 4/13).
 """
 from __future__ import annotations
 
-from typing import List, Mapping, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,8 +36,10 @@ MAX_SN = "max-sn"
 MIN_SN = "min-sn"
 RANDOM_SN = "random-sn"
 MAX_YIELD = "max-yield"
+MAX_YIELD_SHARED = "max-yield-shared"
 ALL_HEURISTICS = (MAX_SN, MIN_SN, RANDOM_SN)          # the paper's three
 BUDGET_HEURISTICS = (MAX_SN, MIN_SN, MAX_YIELD)       # the K-sweep set
+SHARED_HEURISTICS = (MAX_SN, MAX_YIELD_SHARED)        # workload-level ranking
 
 
 def rank_partitions(heuristic: str, eligible: Sequence[int],
@@ -81,3 +92,37 @@ def choose_top_p(heuristic: str, eligible: Sequence[int],
                  ) -> List[int]:
     return rank_partitions(heuristic, eligible, sni_counts, rng,
                            completion_rates)[:p]
+
+
+def rank_partitions_shared(heuristic: str,
+                           waiting: Mapping[int, Sequence[Tuple[int, float]]],
+                           rng: np.random.Generator) -> List[int]:
+    """Workload-level ranking: order candidate partitions best-first by the
+    total expected yield over every pending query waiting on them.
+
+    ``waiting`` maps pid -> the per-waiting-query ``(sni_count,
+    completion_rate)`` observations for that partition (one tuple per
+    query whose SNI/IMA makes the partition eligible).  Scores:
+
+      MAX-SN           : Σ_q sni_q(p)            — most shared pending work
+      MAX-YIELD-SHARED : Σ_q sni_q(p) × rate_q(p) — most expected completed
+                         answers across the workload (rates are the same
+                         Laplace-smoothed per-query observations MAX-YIELD
+                         uses, so a fresh workload degrades to MAX-SN/2)
+
+    Ties are resolved randomly, matching ``rank_partitions``.
+    """
+    pids = sorted(waiting)
+    if not pids:
+        return []
+    if heuristic == MAX_SN:
+        scores = [float(sum(sni for sni, _ in waiting[p])) for p in pids]
+    elif heuristic == MAX_YIELD_SHARED:
+        scores = [float(sum(sni * rate for sni, rate in waiting[p]))
+                  for p in pids]
+    else:
+        raise ValueError(f"unknown shared heuristic {heuristic!r} "
+                         f"(one of {SHARED_HEURISTICS})")
+    tie = rng.permutation(len(pids))
+    order = sorted(range(len(pids)), key=lambda i: (-scores[i], int(tie[i])))
+    return [pids[i] for i in order]

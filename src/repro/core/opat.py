@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from .engine import EngineConfig, make_partition_evaluator
@@ -43,6 +44,30 @@ class OPATResult:
     answers: np.ndarray          # [n, q_pad] global-vertex-id rows
     stats: RunStats
     state: QueryState
+
+
+def absorb_eval_outputs(st: QueryState, pid: int, k: int,
+                        comp_rows: np.ndarray, comp_n: int,
+                        out_rows: np.ndarray, out_step: np.ndarray,
+                        out_dest: np.ndarray, out_n: int) -> None:
+    """Route one evaluator call's outputs into a query's bookkeeping state:
+    completed rows append to the FAA, outgoing continuations land in their
+    destination partitions' IMA files (deduped, paper Fig. 4c), and the
+    partition's yield counters update.  Shared by the per-query OPAT loop
+    and the scheduler's batched evaluation (core/scheduler.py), so the
+    paper's bookkeeping cannot diverge between the two paths."""
+    if comp_n:
+        st.add_answers(np.asarray(comp_rows)[:comp_n])
+    st.observe_yield(pid, comp_n, out_n)
+    if out_n:
+        rows = np.asarray(out_rows)[:out_n]
+        step = np.asarray(out_step)[:out_n]
+        dest = np.asarray(out_dest)[:out_n]
+        for q in range(k):
+            sel = dest == q
+            if sel.any():
+                st.ima[q] = st.ima[q].concat(
+                    BindingBatch(rows=rows[sel], step=step[sel])).dedup()
 
 
 class OPATEngine:
@@ -63,8 +88,25 @@ class OPATEngine:
         w = pg.parts[0].ell_width
         assert all(p.ell_width == w for p in pg.parts), "uniform ELL width required"
         self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
+        self._beval = None
         self.store = store if store is not None else PartitionStore(pg)
         self.prefetch = prefetch
+
+    def batched_evaluator(self):
+        """The *plan-batched* partition evaluator: ``vmap`` of the compiled
+        evaluator over the query axis with the partition inputs broadcast
+        — the mirror image of TraditionalMP's partition-vmapped call.  One
+        loaded partition advances B pending queries' plans in a single
+        compiled call: inputs gain a leading [B] axis (stacked
+        ``PlanArrays``, per-query n_steps / IMA rows / seed flags) while
+        ``part``/``g2l``/``owner`` stay un-batched.  The scheduler
+        (core/scheduler.py) pads B up to a bucket size so the jit cache
+        holds one trace per bucket, reused across rounds.  Built lazily:
+        per-query serving never pays for it."""
+        if self._beval is None:
+            self._beval = jax.jit(jax.vmap(
+                self._eval, in_axes=(None, None, None, 0, 0, 0, 0, 0, 0)))
+        return self._beval
 
     def _run_partition(self, entry: StoreEntry, plan_arrays: PlanArrays,
                        n_steps: int, batch: BindingBatch, seed_fresh: bool,
@@ -94,21 +136,10 @@ class OPATEngine:
                 raise RuntimeError(
                     f"evaluator buffer overflow on partition {pid}; raise "
                     f"EngineConfig.cap (currently {cfg.cap})")
-            cn = int(res.comp_n)
-            if cn:
-                st.add_answers(np.asarray(res.comp_rows)[:cn])
-            on = int(res.out_n)
-            st.observe_yield(pid, cn, on)
-            if on:
-                out_rows = np.asarray(res.out_rows)[:on]
-                out_step = np.asarray(res.out_step)[:on]
-                out_dest = np.asarray(res.out_dest)[:on]
-                for q in range(self.pg.k):
-                    sel = out_dest == q
-                    if sel.any():
-                        st.ima[q] = st.ima[q].concat(
-                            BindingBatch(rows=out_rows[sel], step=out_step[sel])
-                        ).dedup()
+            absorb_eval_outputs(st, pid, self.pg.k,
+                                res.comp_rows, int(res.comp_n),
+                                res.out_rows, res.out_step, res.out_dest,
+                                int(res.out_n))
 
     def run(self, plan: Plan, heuristic: str, seed: int = 0,
             max_loads: Optional[int] = None,

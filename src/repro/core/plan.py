@@ -12,7 +12,7 @@ TraditionalMP, MapReduceMP) and the Pallas kernel consume.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -108,6 +108,27 @@ class PlanArrays:
             dst_value=arr(lambda s: s.dst_value, np.float32),
             closes_cycle=arr(lambda s: int(s.closes_cycle), np.int32),
         )
+
+    @staticmethod
+    def stack(plans: Sequence["PlanArrays"]) -> "PlanArrays":
+        """Stack B same-padding plans into one [B, ...] ``PlanArrays`` — the
+        unit the scheduler's batched partition evaluator consumes (each
+        leaf gains a leading batch axis; ``jax.vmap`` maps over it while
+        the partition inputs broadcast).  The scalar ``n_slots`` /
+        ``n_steps`` metadata is not meaningful for a stacked bundle (each
+        plan keeps its own runtime ``n_steps`` argument), so it is pinned
+        to (0, S): a *constant* aux for the jit cache, ensuring one trace
+        per batch-size bucket regardless of which plans are stacked."""
+        assert plans, "need at least one plan to stack"
+        S = plans[0].src_slot.shape[0]
+        assert all(p.src_slot.shape[0] == S for p in plans), \
+            "stacked plans must share one padded step count"
+        fields = ("start_slot", "start_label", "start_value_op", "start_value",
+                  "src_slot", "dst_slot", "edge_label", "direction",
+                  "dst_label", "dst_value_op", "dst_value", "closes_cycle")
+        stacked = {f: np.stack([np.asarray(getattr(p, f)) for p in plans])
+                   for f in fields}
+        return PlanArrays(n_slots=0, n_steps=S, **stacked)
 
 
 def _enumerate_orders(query: Query, start: int) -> List[List[Tuple[int, bool]]]:

@@ -57,6 +57,23 @@ class Query:
     def n_nodes(self) -> int:
         return len(self.nodes)
 
+    def to_json_dict(self) -> dict:
+        """Plain-JSON form — one line of a ``serve.py --workload`` file."""
+        return {
+            "name": self.name,
+            "nodes": [dataclasses.asdict(n) for n in self.nodes],
+            "edges": [dataclasses.asdict(e) for e in self.edges],
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "Query":
+        q = Query(
+            nodes=[QueryNode(**n) for n in d["nodes"]],
+            edges=[QueryEdge(**e) for e in d["edges"]],
+            name=d.get("name", "q"))
+        q.validate()
+        return q
+
     def validate(self) -> None:
         n = self.n_nodes
         assert n >= 1
@@ -95,6 +112,25 @@ class DisjunctiveQuery:
 
     disjuncts: List[Query]
     name: str = "q_or"
+
+    def to_json_dict(self) -> dict:
+        return {"name": self.name,
+                "disjuncts": [q.to_json_dict() for q in self.disjuncts]}
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "DisjunctiveQuery":
+        """Accepts the full ``{"disjuncts": [...]}`` form or a bare
+        conjunctive pattern (treated as a single disjunct) — so a
+        workload file can mix both."""
+        if "disjuncts" in d:
+            if not d["disjuncts"]:
+                raise ValueError(
+                    f"query {d.get('name', '?')!r} has no disjuncts")
+            return DisjunctiveQuery(
+                disjuncts=[Query.from_json_dict(q) for q in d["disjuncts"]],
+                name=d.get("name", "q_or"))
+        q = Query.from_json_dict(d)
+        return DisjunctiveQuery([q], name=q.name)
 
 
 def make_path_query(labels: Sequence[str], edge_labels: Sequence[str],

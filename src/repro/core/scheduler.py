@@ -1,0 +1,465 @@
+"""QueryScheduler — shared-load multi-query OPAT with batched partition
+evaluation.
+
+The paper's cost model says response time is dominated by the number and
+sequence of partition *loads*, and its heuristics (Sec. 5) optimize that
+sequence per query.  A serving deployment has many queries outstanding at
+once, and a single device-resident partition can advance all of them —
+throughput comes from amortizing data residency across concurrent work
+(Fan et al.'s partial evaluation of distributed query fragments; Vaquero
+et al.'s near-real-time systems survey), not from optimizing queries in
+isolation.  This module is that observation as a subsystem, one layer
+between the ``GraphSession`` API and the engines:
+
+  admission    — ``admit()`` expands a (possibly disjunctive) query into
+                 per-disjunct *jobs*, each carrying its own plan,
+                 ``QueryState`` (SNI/IMA/FAA bookkeeping, identical to the
+                 per-query OPAT loop) and ``max_answers`` budget.
+  the index    — every round the scheduler derives the partition →
+                 waiting-jobs index from the jobs' SNI/IMA eligibility;
+                 ``rank_partitions_shared`` (core/heuristics.py) scores
+                 each candidate partition by total expected yield summed
+                 over every waiting query (MAX-YIELD-SHARED: Σ SNI ×
+                 smoothed completion rate), so one cold load services many
+                 queries, and the store prefetches the *workload's*
+                 runner-up rather than one query's.
+  batched eval — the loaded partition evaluates the plans of ALL waiting
+                 jobs in one compiled call: stacked ``PlanArrays`` +
+                 per-job inputs through ``OPATEngine.batched_evaluator()``
+                 (``vmap`` over the query axis, partition broadcast).  The
+                 batch is padded up to a power-of-two bucket so the jit
+                 cache keeps one trace per bucket, reused across rounds
+                 and batch sizes.
+  retirement   — a job retires when its budget is met or nothing is
+                 eligible; a query retires when all its jobs have.  Retired
+                 queries drop out of the index, so their partitions stop
+                 being touched and age out of the store's LRU naturally;
+                 with ``release_retired=True`` the scheduler additionally
+                 ``release()``s partitions no pending job can currently
+                 use (observable via ``LoadStats.released``).
+
+Per-query bookkeeping correctness is preserved exactly: each job routes
+its evaluator outputs through the same ``absorb_eval_outputs`` as the
+one-query-at-a-time loop, so exhaustive answers are bit-identical to
+sequential ``GraphSession.submit`` (tests/test_scheduler.py asserts this
+for all three engines — non-OPAT engines have no host partition loop to
+share, so the scheduler drains their jobs sequentially with unchanged
+semantics).
+
+``LoadStats`` attribution is *round-scoped*: ``ScheduleReport.load_stats``
+is the store's exact delta over one ``run()`` (what the round cost), and
+each ``QueryResult.load_stats`` is that query's participation view — the
+sum of the per-load-event deltas for loads its plans took part in (a cold
+load shared by three queries appears in each one's view but only once in
+the round's).  Interleaved/batched submits therefore never bleed other
+queries' store traffic into a result's counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Set, Union
+
+import numpy as np
+
+from .heuristics import MAX_YIELD_SHARED, SHARED_HEURISTICS, \
+    rank_partitions_shared
+from .metrics import RunStats, l_ideal_for_plan
+from .opat import OPATEngine, absorb_eval_outputs
+from .plan import Plan, PlanArrays, generate_plan
+from .query import DisjunctiveQuery, Query
+from .runner import RunReport, RunRequest, truncate_answers
+from .session import QueryResult
+from .state import BindingBatch, QueryState
+from .store import LoadStats
+
+
+def batch_bucket(n: int) -> int:
+    """Round a batch size up to the next power of two — the padded batch
+    shapes the compiled call sees, so B=5..8 all reuse the B=8 trace."""
+    assert n >= 1
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class _Job:
+    """One disjunct of one admitted query: a plan plus the same SNI/IMA/FAA
+    bookkeeping state the per-query OPAT loop keeps."""
+
+    qid: int
+    plan: Plan
+    plan_arrays: PlanArrays
+    state: QueryState
+    max_answers: Optional[int]
+    retired: bool = False
+    load_stats: LoadStats = dataclasses.field(default_factory=LoadStats)
+    report: Optional[RunReport] = None   # sequential fallback: engine-built
+
+
+@dataclasses.dataclass
+class _Admitted:
+    """One admitted query: its jobs plus per-query attribution."""
+
+    qid: int
+    name: str
+    jobs: List[_Job]
+    max_answers: Optional[int]
+    load_stats: LoadStats = dataclasses.field(default_factory=LoadStats)
+    finished_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    """What one ``run()`` round produced: per-query results plus the
+    workload-level load sequence and the round-scoped store delta."""
+
+    results: List[QueryResult]   # queries finished this round, admit order
+    loads: List[int]             # workload-level partition-load sequence
+    batch_sizes: List[int]       # jobs advanced per load (1s when not shared)
+    load_stats: LoadStats        # exact store delta over this round
+    wall_s: float
+    shared: bool                 # True when the shared OPAT path ran
+
+    @property
+    def n_loads(self) -> int:
+        return len(self.loads)
+
+    @property
+    def loads_per_query(self) -> float:
+        """Workload loads amortized over the round's queries — the shared
+        path's headline metric (one load advancing 4 queries counts once
+        here, once per query in each ``QueryResult``)."""
+        return self.n_loads / len(self.results) if self.results else 0.0
+
+
+class QueryScheduler:
+    """Admits a batch/stream of queries against one ``GraphSession`` and
+    serves them with workload-level load ordering.
+
+    ``heuristic`` is a shared ranking (``SHARED_HEURISTICS``:
+    ``max-yield-shared`` default, or ``max-sn`` for the plain summed-SNI
+    variant); the per-query heuristic of the session still governs the
+    non-OPAT sequential fallback.  ``release_retired`` proactively frees
+    store entries no pending job can use when a query retires (off by
+    default: a warm entry is only worth dropping under memory pressure).
+    """
+
+    def __init__(self, session, *, heuristic: str = MAX_YIELD_SHARED,
+                 seed: Optional[int] = None,
+                 release_retired: bool = False,
+                 prefetch: Optional[bool] = None):
+        if heuristic not in SHARED_HEURISTICS:
+            raise ValueError(f"shared heuristic must be one of "
+                             f"{SHARED_HEURISTICS}, got {heuristic!r}")
+        self.session = session
+        self.pg = session.pg
+        self.store = session.store
+        self.heuristic = heuristic
+        self.seed = session.seed if seed is None else seed
+        self.release_retired = release_retired
+        self.prefetch = (getattr(session.engine, "prefetch", False)
+                         if prefetch is None else prefetch)
+        # reported queries are pruned after each run(), so a long-lived
+        # streaming scheduler holds state proportional to the PENDING set,
+        # not to everything it ever served
+        self._admitted: Dict[int, _Admitted] = {}
+        self._next_qid = 0
+        self._jobs: List[_Job] = []
+        self._touched: Set[int] = set()   # pids the shared loop ever loaded
+        self.loads: List[int] = []
+        self.batch_sizes: List[int] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def admit(self, query: Union[Query, DisjunctiveQuery],
+              max_answers: Optional[int] = None) -> int:
+        """Add a query to the pending set; returns its qid.  ``max_answers``
+        is the per-disjunct answer budget K, exactly as in ``submit``."""
+        self._check_binding()
+        session = self.session
+        cfg = session.config
+        qid = self._next_qid
+        self._next_qid += 1
+        disjuncts = (query.disjuncts if isinstance(query, DisjunctiveQuery)
+                     else [query])
+        jobs: List[_Job] = []
+        for q in disjuncts:
+            plan = generate_plan(q, session.graph, session.catalog)
+            assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
+            counts = self.pg.start_label_counts(plan.start_label,
+                                                plan.start_value_op,
+                                                plan.start_value)
+            st = QueryState.initial(self.pg.k, cfg.q_pad, counts,
+                                    track_answer_keys=max_answers is not None)
+            jobs.append(_Job(
+                qid=qid, plan=plan,
+                plan_arrays=PlanArrays.from_plan(plan, pad_steps=cfg.s_pad),
+                state=st, max_answers=max_answers))
+        self._admitted[qid] = _Admitted(qid=qid, name=query.name, jobs=jobs,
+                                        max_answers=max_answers)
+        self._jobs.extend(jobs)
+        return qid
+
+    def _check_binding(self) -> None:
+        """A scheduler is bound to one session *binding*: its store, layout,
+        and SNI counts all name the assignment that existed at construction.
+        ``GraphSession.repartition()`` rebinds the session (new store, new
+        pids/paddings), which would silently mix layouts — refuse loudly."""
+        if (self.session.store is not self.store
+                or self.session.pg is not self.pg):
+            raise RuntimeError(
+                "the session was rebound (repartition()?) after this "
+                "scheduler was created; its pending state names the old "
+                "layout — create a fresh scheduler via "
+                "GraphSession.scheduler()/submit_many()")
+
+    @property
+    def n_pending(self) -> int:
+        return sum(1 for j in self._jobs if not j.retired)
+
+    def partition_waiters(self) -> Dict[int, List[int]]:
+        """The partition → waiting-qids index (observability/tests): which
+        pending queries each partition would advance if loaded now."""
+        return {p: sorted({j.qid for j in js})
+                for p, js in self._waiters().items()}
+
+    # -- the shared-load loop ----------------------------------------------
+
+    def run(self) -> ScheduleReport:
+        """Serve every pending job to retirement and return the round's
+        report.  Re-entrant: queries admitted after a ``run()`` are served
+        (and reported) by the next one."""
+        self._check_binding()
+        t0 = time.time()
+        stats0 = self.store.stats.copy()
+        loads0, batches0 = len(self.loads), len(self.batch_sizes)
+        shared = isinstance(self.session.engine, OPATEngine)
+        if shared:
+            self._run_shared(t0)
+        else:
+            self._run_sequential(t0)
+        report = ScheduleReport(
+            results=self._collect_results(t0),
+            loads=self.loads[loads0:],
+            batch_sizes=self.batch_sizes[batches0:],
+            load_stats=self.store.stats - stats0,
+            wall_s=time.time() - t0,
+            shared=shared)
+        return report
+
+    def _run_shared(self, t0: float) -> None:
+        engine: OPATEngine = self.session.engine
+        beval = engine.batched_evaluator()
+        rng = np.random.default_rng(self.seed)
+        limit = 64 * self.pg.k * max(1, len(self._jobs))
+        while True:
+            self._retire()
+            waiters = self._waiters()
+            if not waiters:
+                break
+            if len(self.loads) >= limit:
+                raise RuntimeError("scheduler exceeded max partition loads "
+                                   f"({limit}); likely a routing bug")
+            # score each candidate by every waiter's (SNI, completion
+            # rate); a job's rates are partition-indexed but identical
+            # across candidates, so compute them once per job per round —
+            # and only when the ranking reads them (as in the per-query
+            # OPAT loop, which gates rates on MAX-YIELD the same way)
+            rates = {}
+            if self.heuristic == MAX_YIELD_SHARED:
+                for js in waiters.values():
+                    for j in js:
+                        if id(j) not in rates:
+                            rates[id(j)] = j.state.completion_rates()
+            scored = {p: [(j.state.sni_count(p),
+                           rates[id(j)][p] if rates else 0.0)
+                          for j in js]
+                      for p, js in waiters.items()}
+            ranked = rank_partitions_shared(self.heuristic, scored, rng)
+            pid = int(ranked[0])
+            batch = waiters[pid]
+            ev0 = self.store.stats.copy()
+            entry = self.store.get(pid)
+            # the attributable event is the load itself (cold/warm +
+            # prefetch hit); snapshot it BEFORE staging the runner-up so
+            # a query retiring this round is never charged prefetch
+            # traffic for a partition it takes no part in
+            event = self.store.stats - ev0
+            # stage the WORKLOAD's runner-up while pid evaluates — the
+            # shared generalization of OPAT's per-query prefetch
+            if self.prefetch and len(ranked) > 1:
+                self.store.prefetch(int(ranked[1]))
+            self._eval_batch(beval, entry, pid, batch)
+            self.loads.append(pid)
+            self.batch_sizes.append(len(batch))
+            # round-scoped attribution: the event lands once in each
+            # participating QUERY's view, and once per participating JOB
+            # (a disjunct's RunStats) — never in any bystander's
+            for qid in {j.qid for j in batch}:
+                rec = self._admitted[qid]
+                rec.load_stats = rec.load_stats + event
+            self._touched.add(pid)
+            for j in batch:
+                j.load_stats = j.load_stats + event
+                j.state.loads.append(pid)
+                j.state.iterations += 1
+
+    def _eval_batch(self, beval, entry, pid: int, batch: List[_Job]) -> None:
+        """One compiled call advances every waiting job's plan against the
+        loaded partition (chunked when an IMA exceeds the row capacity;
+        later chunks are inert for jobs already drained)."""
+        cfg = self.session.config
+        k = self.pg.k
+        B = len(batch)
+        Bpad = batch_bucket(B)
+        plans = [j.plan_arrays for j in batch]
+        stacked = PlanArrays.stack(plans + [plans[0]] * (Bpad - B))
+        n_steps = np.asarray([j.plan.n_steps for j in batch]
+                             + [1] * (Bpad - B), np.int32)
+        imas: List[BindingBatch] = []
+        seed_flags: List[bool] = []
+        for j in batch:
+            imas.append(j.state.ima[pid])
+            j.state.ima[pid] = BindingBatch.empty(cfg.q_pad)
+            seed_flags.append(bool(j.state.fresh_pending[pid]))
+            j.state.fresh_pending[pid] = False
+        n_chunks = max(1, max(-(-bb.n // cfg.cap) for bb in imas))
+        for ci in range(n_chunks):
+            in_rows = np.full((Bpad, cfg.cap, cfg.q_pad), -1, np.int32)
+            in_step = np.zeros((Bpad, cfg.cap), np.int32)
+            in_valid = np.zeros((Bpad, cfg.cap), bool)
+            for b, bb in enumerate(imas):
+                lo = ci * cfg.cap
+                n = min(bb.n - lo, cfg.cap)
+                if n > 0:
+                    in_rows[b, :n] = bb.rows[lo:lo + n]
+                    in_step[b, :n] = bb.step[lo:lo + n]
+                    in_valid[b, :n] = True
+            sf = np.asarray([s and ci == 0 for s in seed_flags]
+                            + [False] * (Bpad - B))
+            res = beval(entry.part, entry.g2l, self.store.owner, stacked,
+                        n_steps, in_rows, in_step, in_valid, sf)
+            overflow = np.asarray(res.overflow)
+            comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
+            out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
+            out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
+            for b, j in enumerate(batch):
+                if bool(overflow[b]):
+                    raise RuntimeError(
+                        f"evaluator buffer overflow on partition {pid} "
+                        f"(query {j.plan.query.name!r} in a batch of {B}); "
+                        f"raise EngineConfig.cap (currently {cfg.cap})")
+                absorb_eval_outputs(j.state, pid, k,
+                                    comp_rows[b], int(comp_n[b]),
+                                    out_rows[b], out_step[b], out_dest[b],
+                                    int(out_n[b]))
+
+    def _run_sequential(self, t0: float) -> None:
+        """Non-OPAT engines run a whole query as one (or few) compiled
+        program(s) with no host partition loop to share, so the scheduler
+        drains their jobs one query at a time — answers, budgets, and
+        per-call LoadStats deltas identical to sequential ``submit``."""
+        session = self.session
+        for rec in self._admitted.values():
+            if rec.finished_at is not None:
+                continue
+            ev0 = self.store.stats.copy()
+            for j in rec.jobs:
+                jv0 = self.store.stats.copy()
+                rep = session.engine.run_request(RunRequest(
+                    plan=j.plan, heuristic=session.heuristic,
+                    max_answers=j.max_answers, seed=self.seed))
+                j.retired = True
+                j.report = rep  # engine-built report reused verbatim
+                j.load_stats = j.load_stats + (self.store.stats - jv0)
+                self.loads.extend(rep.stats.loads)
+                self.batch_sizes.extend([1] * len(rep.stats.loads))
+            rec.load_stats = rec.load_stats + (self.store.stats - ev0)
+            rec.finished_at = time.time()
+
+    # -- retirement and the waiter index -----------------------------------
+
+    def _waiters(self) -> Dict[int, List[_Job]]:
+        w: Dict[int, List[_Job]] = {}
+        for j in self._jobs:
+            if j.retired:
+                continue
+            for p in j.state.eligible():
+                w.setdefault(int(p), []).append(j)
+        return w
+
+    def _retire(self) -> None:
+        """Retire jobs whose budget is met or whose SNI/IMA are exhausted,
+        stamp queries whose last job retired, and (optionally) release
+        store entries no pending job can currently use."""
+        now = time.time()
+        newly: List[_Job] = []
+        for j in self._jobs:
+            if j.retired:
+                continue
+            if j.state.budget_met(j.max_answers) or not j.state.eligible():
+                j.retired = True
+                newly.append(j)
+        for rec in self._admitted.values():
+            if rec.finished_at is None and all(j.retired for j in rec.jobs):
+                rec.finished_at = now
+        if newly and self.release_retired:
+            # any partition the workload loaded that no pending job can
+            # currently use is releasable — cumulative, so an early
+            # retiree's partitions go as soon as the last query needing
+            # them retires (prefetched-but-never-loaded entries are left
+            # to the LRU)
+            needed: Set[int] = set()
+            for j in self._jobs:
+                if not j.retired:
+                    needed.update(int(p) for p in j.state.eligible())
+            for pid in sorted(self._touched - needed):
+                if self.store.contains(pid):
+                    self.store.release(pid)
+
+    # -- results -----------------------------------------------------------
+
+    def _collect_results(self, t0: float) -> List[QueryResult]:
+        """Build the finished queries' results (admit order) and prune
+        their state — a streaming scheduler's footprint stays proportional
+        to the pending set, not to its serving history."""
+        results: List[QueryResult] = []
+        done: List[int] = []
+        for rec in self._admitted.values():
+            if rec.finished_at is None:
+                continue
+            done.append(rec.qid)
+            reports: List[RunReport] = []
+            answers: Optional[np.ndarray] = None
+            for j in rec.jobs:
+                rep = j.report
+                if rep is None:          # shared path: build from job state
+                    a = truncate_answers(j.state.unique_answers(),
+                                         j.max_answers)
+                    delta = j.load_stats
+                    rep = RunReport(
+                        answers=a,
+                        stats=RunStats(
+                            query=j.plan.query.name, scheme=self.pg.scheme,
+                            heuristic=self.heuristic,
+                            loads=list(j.state.loads),
+                            l_ideal=l_ideal_for_plan(self.pg, j.plan),
+                            n_answers=int(a.shape[0]),
+                            iterations=j.state.iterations,
+                            answers_requested=j.max_answers,
+                            cold_loads=delta.cold_loads,
+                            warm_loads=delta.warm_loads,
+                            prefetch_hits=delta.prefetch_hits),
+                        engine="opat", extra={"state": j.state})
+                reports.append(rep)
+                a = rep.answers
+                answers = a if answers is None else np.unique(
+                    np.concatenate([answers, a]), axis=0)
+            results.append(QueryResult(
+                name=rec.name, answers=answers, reports=reports,
+                latency_s=max(0.0, rec.finished_at - t0),
+                load_stats=rec.load_stats))
+        for qid in done:
+            del self._admitted[qid]
+        self._jobs = [j for j in self._jobs if not j.retired]
+        return results

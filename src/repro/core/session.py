@@ -25,13 +25,20 @@ from (graph, scheme, k, engine, EngineConfig) and then serves repeated
 applies per disjunct, matching ``launch/serve.py`` semantics) and returns a
 ``QueryResult`` carrying the merged answers, per-disjunct ``RunReport``s,
 wall latency, and this call's cold/warm/prefetch ``LoadStats`` delta.
+
+``submit_many(queries, max_answers=K)`` serves a whole batch through the
+``QueryScheduler`` (core/scheduler.py): pending queries share partition
+loads (workload-level MAX-YIELD-SHARED ordering, batched partition
+evaluation on the OPAT path), each retires independently on its own
+budget, and the workload profile absorbs every result exactly as single
+submits do.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import time
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -204,6 +211,57 @@ class GraphSession:
         return QueryResult(name=query.name, answers=answers, reports=reports,
                            latency_s=latency,
                            load_stats=self.store.stats - stats0)
+
+    def scheduler(self, heuristic: Optional[str] = None,
+                  seed: Optional[int] = None,
+                  release_retired: bool = False) -> "Any":
+        """A ``QueryScheduler`` bound to this session's store, engine, and
+        catalog (core/scheduler.py) — the multi-query serving loop.
+        ``heuristic`` is a *shared* ranking (default MAX-YIELD-SHARED);
+        prefer ``submit_many`` unless you need streaming admission, since
+        only ``submit_many`` feeds results into the workload profile."""
+        from .heuristics import MAX_YIELD_SHARED
+        from .scheduler import QueryScheduler
+        return QueryScheduler(
+            self,
+            heuristic=heuristic if heuristic is not None else MAX_YIELD_SHARED,
+            seed=seed, release_retired=release_retired)
+
+    def submit_many(self, queries: Sequence[Union[Query, DisjunctiveQuery]],
+                    max_answers: Union[None, int,
+                                       Sequence[Optional[int]]] = None,
+                    heuristic: Optional[str] = None,
+                    seed: Optional[int] = None,
+                    release_retired: bool = False) -> "Any":
+        """Serve a batch of queries through the shared-load scheduler and
+        return its ``ScheduleReport`` (``.results`` holds one
+        ``QueryResult`` per query, in input order).  ``max_answers`` is
+        one per-disjunct budget K for the whole batch, or a per-query
+        sequence of budgets (None entries = exhaustive).
+
+        Semantics match a loop of ``submit`` calls — same per-query answer
+        sets when exhaustive, same per-disjunct budget K, and every result
+        is absorbed into the workload profile exactly as single submits
+        are — but on the OPAT path the partition-load sequence is chosen
+        at the *workload* level, so overlapping queries share cold loads
+        and each ``QueryResult.load_stats`` reports the loads that query
+        participated in (round-scoped, never other queries' traffic).
+        """
+        if isinstance(max_answers, (list, tuple)):
+            budgets = list(max_answers)
+            if len(budgets) != len(queries):
+                raise ValueError(f"got {len(budgets)} budgets for "
+                                 f"{len(queries)} queries")
+        else:
+            budgets = [max_answers] * len(queries)
+        sched = self.scheduler(heuristic=heuristic, seed=seed,
+                               release_retired=release_retired)
+        for q, b in zip(queries, budgets):
+            sched.admit(q, max_answers=b)
+        report = sched.run()
+        for res in report.results:
+            self._absorb(res.reports, res.answers)
+        return report
 
     def _absorb(self, reports: List[RunReport], answers: np.ndarray) -> None:
         from .repartition import answer_span_matrix

@@ -73,6 +73,8 @@ class LoadStats:
     prefetch_hits: int = 0       # gets served by a previously prefetched entry
     bytes_cold: int = 0          # bytes transferred by cold (demand) loads
     bytes_prefetched: int = 0    # bytes transferred off the critical path
+    released: int = 0            # entries release()d by a caller (scheduler
+                                 # retirement: no pending query needs them)
 
     @property
     def warm_loads(self) -> int:
@@ -92,6 +94,13 @@ class LoadStats:
 
     def __sub__(self, other: "LoadStats") -> "LoadStats":
         return LoadStats(**{f.name: getattr(self, f.name) - getattr(other, f.name)
+                            for f in dataclasses.fields(self)})
+
+    def __add__(self, other: "LoadStats") -> "LoadStats":
+        """Counter-wise sum — the scheduler accumulates one query's
+        participation view by adding the per-load-event deltas it took
+        part in."""
+        return LoadStats(**{f.name: getattr(self, f.name) + getattr(other, f.name)
                             for f in dataclasses.fields(self)})
 
     def to_dict(self) -> Dict[str, Any]:
@@ -218,6 +227,18 @@ class PartitionStore:
         for ck in cks:
             del self._cache[ck]
         return bool(cks)
+
+    def release(self, key: StoreKey) -> bool:
+        """A counted ``drop``: the scheduler's retirement hook.  When every
+        query waiting on a partition has retired, the scheduler releases
+        the entry so its device memory is reclaimed immediately instead of
+        waiting to age out of the LRU; ``LoadStats.released`` makes that
+        observable.  A later ``get`` simply re-stages cold — release never
+        affects correctness, only residency."""
+        ok = self.drop(key)
+        if ok:
+            self.stats.released += 1
+        return ok
 
     def clear(self) -> None:
         self._cache.clear()

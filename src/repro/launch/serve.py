@@ -11,6 +11,20 @@ counts, latency) plus the store's cold/warm/prefetch split; the ``--json``
 report additionally carries the session's cache counters and per-partition
 workload profile (the input of core/repartition.py).
 
+Two serving modes:
+
+  * default — the dataset's query batch, one ``submit`` per query (the
+    paper's one-at-a-time shape);
+  * ``--workload file.jsonl`` — a batch of queries (one JSON query per
+    line, optional per-line ``"max_answers"``) served through the
+    shared-load ``QueryScheduler`` (core/scheduler.py): overlapping
+    queries share partition loads, plans are evaluated batched, and the
+    report adds aggregate throughput (queries/sec, loads-per-query,
+    latency percentiles).  ``--emit-workload file.jsonl`` writes the
+    dataset's own queries in that format and exits, so the two flags
+    round-trip.  ``--verify`` keeps the same oracle exit-code contract in
+    both modes.
+
 The WawPart loop end to end: serve once with ``--profile-json p.json``,
 then serve the same dataset/flags with ``--repartition-from p.json`` — the
 session re-lays the graph out from the observed traffic (scheme ``"waw"``)
@@ -36,9 +50,11 @@ import time
 
 import numpy as np
 
-from repro.core import (EngineConfig, GraphSession, MAX_SN, MAX_YIELD, MIN_SN,
-                        RANDOM_SN, partition_quality,
+from repro.core import (EngineConfig, GraphSession, MAX_SN, MAX_YIELD,
+                        MAX_YIELD_SHARED, MIN_SN, RANDOM_SN,
+                        SHARED_HEURISTICS, partition_quality,
                         total_connected_components)
+from repro.core.query import DisjunctiveQuery
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)
 
@@ -91,10 +107,33 @@ def main() -> None:
                          "feed this saved workload profile (from a previous "
                          "run's --profile-json) to GraphSession.repartition()"
                          " and serve against the improved 'waw' layout")
+    ap.add_argument("--workload", default="", metavar="FILE.jsonl",
+                    help="batch mode: serve the queries in this JSON-lines "
+                         "file (one query per line, optional per-line "
+                         "'max_answers') through the shared-load "
+                         "QueryScheduler instead of the dataset's default "
+                         "batch; reports per-query latency plus aggregate "
+                         "throughput")
+    ap.add_argument("--emit-workload", default="", metavar="FILE.jsonl",
+                    help="write the dataset's query batch in --workload "
+                         "format to this path and exit (round-trips with "
+                         "--workload)")
+    ap.add_argument("--shared-heuristic", default=MAX_YIELD_SHARED,
+                    choices=list(SHARED_HEURISTICS),
+                    help="workload-level partition ranking used by "
+                         "--workload batch mode")
     args = ap.parse_args()
 
     graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
     print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
+
+    if args.emit_workload:
+        with open(args.emit_workload, "w") as f:
+            for dq in dqueries:
+                f.write(json.dumps(dq.to_json_dict()) + "\n")
+        print(f"[serve] wrote {len(dqueries)} queries to "
+              f"{args.emit_workload}")
+        return
 
     t0 = time.time()
     session = GraphSession(graph, k=args.k, scheme=args.scheme,
@@ -121,10 +160,41 @@ def main() -> None:
               f"sizes={q['sizes']} "
               f"total_cc={total_connected_components(session.pg)}")
 
+    throughput = None
+    if args.workload:
+        with open(args.workload) as f:
+            lines = [json.loads(l) for l in f if l.strip()]
+        wqueries = [DisjunctiveQuery.from_json_dict(d) for d in lines]
+        budgets = [d.get("max_answers", args.max_answers) for d in lines]
+        print(f"[serve] workload: {len(wqueries)} queries from "
+              f"{args.workload} via the shared scheduler "
+              f"({args.shared_heuristic})")
+        report = session.submit_many(wqueries, max_answers=budgets,
+                                     heuristic=args.shared_heuristic)
+        lat = [r.latency_s for r in report.results]
+        qps = (len(report.results) / report.wall_s if report.wall_s else 0.0)
+        throughput = {
+            "n_queries": len(report.results),
+            "wall_s": report.wall_s,
+            "qps": qps,
+            "shared": report.shared,
+            "workload_loads": report.n_loads,
+            "loads_per_query": report.loads_per_query,
+            "batch_sizes": report.batch_sizes,
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "cold_loads": report.load_stats.cold_loads,
+            "warm_loads": report.load_stats.warm_loads,
+            "prefetch_hits": report.load_stats.prefetch_hits,
+        }
+        served = zip(wqueries, report.results, budgets)
+    else:
+        served = ((dq, session.submit(dq, max_answers=args.max_answers),
+                   args.max_answers) for dq in dqueries)
+
     records = []
     mismatches = 0
-    for dq in dqueries:
-        res = session.submit(dq, max_answers=args.max_answers)
+    for dq, res, budget in served:
         answers = res.answers
         n_loads = res.n_loads
         l_ideal = max(s.l_ideal for s in res.stats)
@@ -143,7 +213,7 @@ def main() -> None:
         if args.verify:
             from repro.core.oracle import match_disjunctive
             ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
-            if args.max_answers is None:
+            if budget is None:
                 match = (answers.shape[0] == ref.shape[0]
                          and (answers.shape[0] == 0
                               or np.array_equal(np.unique(answers, axis=0),
@@ -154,13 +224,22 @@ def main() -> None:
                 # the union can never fall below min(K, ref_total)
                 refset = {tuple(r) for r in ref}
                 match = (all(tuple(r) in refset for r in answers)
-                         and answers.shape[0] >= min(args.max_answers,
-                                                     ref.shape[0]))
+                         and answers.shape[0] >= min(budget, ref.shape[0]))
             rec["oracle_match"] = bool(match)
             mismatches += int(not match)
             print(f"        oracle: {ref.shape[0]} answers "
                   f"{'MATCH' if match else 'MISMATCH'}")
         records.append(rec)
+
+    if throughput is not None:
+        print(f"[serve] throughput: {throughput['n_queries']} queries in "
+              f"{throughput['wall_s']:.2f}s -> {throughput['qps']:.1f} q/s, "
+              f"{throughput['workload_loads']} workload loads "
+              f"({throughput['loads_per_query']:.2f}/query, "
+              f"cold={throughput['cold_loads']} "
+              f"warm={throughput['warm_loads']}), "
+              f"p50={throughput['p50_latency_s']*1000:.0f} ms "
+              f"p95={throughput['p95_latency_s']*1000:.0f} ms")
 
     cache = session.load_stats.to_dict()
     print(f"[serve] session cache: {cache['cold_loads']} cold / "
@@ -176,11 +255,13 @@ def main() -> None:
         # materialize/serialize it separately per output file
         profile = session.workload_profile()
         if args.json:
-            report = {"queries": records,
-                      "cache": cache,
-                      "workload_profile": profile}
+            rep = {"queries": records,
+                   "cache": cache,
+                   "workload_profile": profile}
+            if throughput is not None:
+                rep["throughput"] = throughput
             with open(args.json, "w") as f:
-                json.dump(report, f, indent=2)
+                json.dump(rep, f, indent=2)
         if args.profile_json:
             with open(args.profile_json, "w") as f:
                 json.dump(profile, f, indent=2)
