@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
+import tempfile
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -382,6 +383,125 @@ def run_shared_sweep(batch_sizes: Sequence[int] = (2, 4, 8),
     return SharedSweepResult(phases=phases, answers_identical=identical,
                              oracle_match=bool(oracle_ok),
                              wall_s=time.time() - t0)
+
+
+@dataclasses.dataclass
+class OocorePhase:
+    """One serving mode of the out-of-core comparison: the same query mix
+    against in-RAM partitions vs disk-resident shards behind the
+    three-tier cache."""
+
+    mode: str                  # "in-ram" | "out-of-core"
+    disk_reads: int            # shard reads against the disk tier
+    read_ahead_issued: int     # background-thread reads started
+    read_ahead_hits: int       # host gets served by a read-ahead
+    cold_loads: int            # device transfers on the critical path
+    warm_loads: int
+    bytes_disk: int
+    p50_ms: float
+    p95_ms: float
+    wall_s: float
+    n_answers: int
+
+
+@dataclasses.dataclass
+class OocoreSweepResult:
+    """In-RAM vs out-of-core serving of an identical query mix, on a graph
+    whose total shard bytes exceed the configured host-cache budget."""
+
+    phases: List[OocorePhase]          # [in-ram, out-of-core]
+    answers_identical: bool            # per-query answers equal across modes
+    oracle_match: bool                 # both modes match the oracle
+    total_part_bytes: int              # shard bytes on disk
+    host_cache_parts: int
+    host_cap_bytes: int                # host budget in bytes (cap x shard)
+    k: int
+    wall_s: float
+
+    def phase(self, mode: str) -> OocorePhase:
+        return next(p for p in self.phases if p.mode == mode)
+
+
+def run_oocore_sweep(k: int = K_PARTITIONS, scheme: str = "kway_shem",
+                     host_cache_parts: int = 2, cache_parts: int = 2,
+                     repeats: int = 2, seed: int = 0, cap: int = 32768,
+                     n_nodes: int = 600, n_edges: int = 1800,
+                     n_embed: int = 20,
+                     graph_dir: Optional[str] = None) -> OocoreSweepResult:
+    """The out-of-core acceptance run: serve a query mix on an in-RAM
+    session, ``save`` the partitioned graph, reopen it with a host cache
+    strictly smaller than the total shard bytes (``host_cache_parts`` of
+    ``k`` uniformly padded shards), and serve the SAME mix out of core.
+    Both the device and host tiers are bounded so the mix keeps paying
+    real disk traffic, the background read-ahead overlaps it, and the
+    table reports disk reads, read-ahead hit rate, and p50/p95 latency
+    against the all-in-RAM baseline — with per-query answers verified
+    identical across modes and against the whole-graph oracle."""
+    t0 = time.time()
+    graph = subgen_like_graph(n_nodes=n_nodes, n_edges=n_edges,
+                              n_embed=n_embed, seed=seed)
+    mix = subgen_queries(graph) * repeats
+    refs = {dq.name: match_disjunctive(graph, dq, q_pad=8) for dq in mix}
+
+    def phase(sess, mode: str) -> Tuple[OocorePhase, Dict[str, np.ndarray]]:
+        sess.submit(mix[0])                 # compile + first-touch warm-up
+        stats0 = sess.load_stats.copy()
+        lat: List[float] = []
+        answers: Dict[str, np.ndarray] = {}
+        wall0 = time.time()
+        for dq in mix:
+            res = sess.submit(dq)
+            lat.append(res.latency_s)
+            answers[dq.name] = res.answers
+        wall = time.time() - wall0
+        d = sess.load_stats - stats0
+        lat.sort()
+        return OocorePhase(
+            mode=mode, disk_reads=d.disk_reads,
+            read_ahead_issued=d.read_ahead_issued,
+            read_ahead_hits=d.read_ahead_hits,
+            cold_loads=d.cold_loads, warm_loads=d.warm_loads,
+            bytes_disk=d.bytes_disk,
+            p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            wall_s=wall,
+            n_answers=sum(a.shape[0] for a in answers.values())), answers
+
+    ram_sess = GraphSession(graph, k=k, scheme=scheme, engine="opat",
+                            config=EngineConfig(cap=cap),
+                            cache_parts=cache_parts, seed=seed)
+    ram_phase, ram_answers = phase(ram_sess, "in-ram")
+
+    tmp = None
+    if graph_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="oocore-bench-")
+        graph_dir = tmp.name
+    try:
+        manifest = ram_sess.save(graph_dir)
+        total_bytes = sum(p["nbytes"] for p in manifest["partitions"])
+        cap_bytes = host_cache_parts * max(p["nbytes"]
+                                           for p in manifest["partitions"])
+        assert total_bytes > cap_bytes, \
+            "out-of-core sweep needs total shard bytes above the host cap"
+        ooc_sess = GraphSession.open(graph_dir, engine="opat",
+                                     config=EngineConfig(cap=cap),
+                                     cache_parts=cache_parts,
+                                     host_cache_parts=host_cache_parts,
+                                     seed=seed)
+        ooc_phase, ooc_answers = phase(ooc_sess, "out-of-core")
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    identical = all(np.array_equal(ram_answers[n], ooc_answers[n])
+                    for n in ram_answers)
+    oracle_ok = all(np.array_equal(ram_answers[dq.name], refs[dq.name])
+                    and np.array_equal(ooc_answers[dq.name], refs[dq.name])
+                    for dq in mix)
+    return OocoreSweepResult(
+        phases=[ram_phase, ooc_phase], answers_identical=identical,
+        oracle_match=bool(oracle_ok), total_part_bytes=total_bytes,
+        host_cache_parts=host_cache_parts, host_cap_bytes=cap_bytes, k=k,
+        wall_s=time.time() - t0)
 
 
 def fmt_table(rows: List[List[str]], header: List[str]) -> str:

@@ -23,8 +23,8 @@ from typing import Dict, List
 import numpy as np
 
 from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN,
-                     RANDOM_SN, SCHEMES, BudgetSweepResult, SharedSweepResult,
-                     SweepResult, WawSweepResult, fmt_table,
+                     RANDOM_SN, SCHEMES, BudgetSweepResult, OocoreSweepResult,
+                     SharedSweepResult, SweepResult, WawSweepResult, fmt_table,
                      avg_load_ratio_across_schemes, avg_load_ratio_for_batch)
 
 
@@ -170,6 +170,34 @@ def table_shared(shared: SharedSweepResult, out_dir: str) -> str:
                if shared.answers_identical else "ANSWER SETS DIFFER")
     oracle = "oracle MATCH" if shared.oracle_match else "oracle MISMATCH"
     return fmt_table(rows, header) + f"\n({verdict}, {oracle})"
+
+
+def table_oocore(oocore: OocoreSweepResult, out_dir: str) -> str:
+    """In-RAM vs out-of-core serving of the same query mix (disk →
+    pinned-host LRU → device LRU, src/repro/storage/).  The graph's total
+    shard bytes exceed the host budget, so the out-of-core row pays real
+    disk reads; the read-ahead column shows how many of those overlapped
+    evaluation instead of blocking a load, and the latency columns price
+    the tier against the all-in-RAM baseline — at identical,
+    oracle-verified answers."""
+    rows = []
+    for p in oocore.phases:
+        rows.append([
+            p.mode, p.disk_reads,
+            f"{p.read_ahead_hits}/{p.read_ahead_issued}",
+            p.cold_loads, p.warm_loads, p.bytes_disk,
+            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}", p.n_answers,
+        ])
+    header = ["mode", "disk reads", "ra hit/issued", "cold", "warm",
+              "disk bytes", "p50 ms", "p95 ms", "answers"]
+    _csv(os.path.join(out_dir, "table_oocore.csv"), header, rows)
+    verdict = ("identical answer sets"
+               if oocore.answers_identical else "ANSWER SETS DIFFER")
+    oracle = "oracle MATCH" if oocore.oracle_match else "oracle MISMATCH"
+    return (fmt_table(rows, header)
+            + f"\n({verdict}, {oracle}; {oocore.total_part_bytes} shard "
+              f"bytes on disk vs a {oocore.host_cap_bytes}-byte host "
+              f"budget = {oocore.host_cache_parts}/{oocore.k} partitions)")
 
 
 def figs_loads(sweep: SweepResult, out_dir: str) -> str:

@@ -29,12 +29,17 @@ def main() -> None:
     ap.add_argument("--shared-smoke", action="store_true",
                     help="only run the shared-vs-isolated scheduler sweep "
                          "(small batches; the CI throughput smoke)")
+    ap.add_argument("--oocore-smoke", action="store_true",
+                    help="only run the out-of-core sweep (save -> reopen "
+                         "with a host cache below the graph's shard bytes;"
+                         " the CI disk-tier smoke, gated on oracle match "
+                         "and real disk/read-ahead traffic)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from . import mp_scaling, paper_tables, roofline
-    from .common import (build_workloads, run_budget_sweep, run_shared_sweep,
-                         run_sweep, run_waw_sweep)
+    from .common import (build_workloads, run_budget_sweep, run_oocore_sweep,
+                         run_shared_sweep, run_sweep, run_waw_sweep)
 
     if args.shared_smoke:
         print("== Shared-load scheduling (QueryScheduler, isolated vs "
@@ -45,6 +50,23 @@ def main() -> None:
         if not (shared.answers_identical and shared.oracle_match):
             sys.exit("shared-smoke: answer sets differ across modes or "
                      "mismatch the oracle")   # a real CI gate, like serve
+        return
+
+    if args.oocore_smoke:
+        print("== Out-of-core serving (disk -> host LRU -> device LRU) ==",
+              flush=True)
+        oocore = run_oocore_sweep(seed=args.seed)
+        print(f"   2 phases in {oocore.wall_s:.1f}s")
+        print(paper_tables.table_oocore(oocore, args.out))
+        ooc = oocore.phase("out-of-core")
+        if not (oocore.answers_identical and oocore.oracle_match):
+            sys.exit("oocore-smoke: answer sets differ across modes or "
+                     "mismatch the oracle")   # a real CI gate, like serve
+        if ooc.disk_reads <= 0 or ooc.read_ahead_hits <= 0:
+            sys.exit("oocore-smoke: the out-of-core phase paid no disk "
+                     f"reads ({ooc.disk_reads}) or no read-ahead hits "
+                     f"({ooc.read_ahead_hits}) — the tier was not "
+                     "exercised")
         return
 
     if not args.skip_sweep:
@@ -96,6 +118,11 @@ def main() -> None:
         shared = run_shared_sweep(seed=args.seed)
         print(f"   {len(shared.phases)} phases in {shared.wall_s:.1f}s")
         print(paper_tables.table_shared(shared, args.out), "\n")
+
+        print("== Out-of-core serving (disk -> host LRU -> device LRU) ==")
+        oocore = run_oocore_sweep(seed=args.seed)
+        print(f"   2 phases in {oocore.wall_s:.1f}s")
+        print(paper_tables.table_oocore(oocore, args.out), "\n")
 
         print("== TraditionalMP / MapReduceMP scaling (Sec. 8-9) ==")
         print(mp_scaling.run(args.out, scale=args.scale, seed=args.seed), "\n")

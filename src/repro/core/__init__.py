@@ -10,7 +10,11 @@ Public API:
   RunRequest / RunReport / QueryRunner — unified runner protocol with
                                          answer budgets (core/runner.py)
   PartitionStore / LoadStats           — explicit partition residency: LRU
-                                         device cache + prefetch (core/store.py)
+                                         device cache + prefetch (core/store.py);
+                                         with a DiskCatalog backing it is a
+                                         three-tier disk->host->device cache
+                                         (src/repro/storage/, GraphSession
+                                         .save/.open)
   GraphSession / QueryResult           — stateful serving API: one session,
                                          many queries, shared residency and
                                          a per-partition workload profile

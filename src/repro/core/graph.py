@@ -241,19 +241,28 @@ class PartitionedGraph:
     edge_pad: int
     scheme: str = "?"                 # partitioning-scheme name (for RunStats)
 
+    @property
+    def ell_width(self) -> int:
+        """The uniform ELLPACK width shared by every partition (the jitted
+        evaluator's W dimension).  Out-of-core variants override this with
+        the manifest value, so engines must read it here, not via
+        ``parts[0]``."""
+        w = self.parts[0].ell_width
+        assert all(p.ell_width == w for p in self.parts), \
+            "uniform ELL width required"
+        return w
+
     def start_label_counts(self, label_id: int, value_op: int = 0,
                            value: float = 0.0) -> np.ndarray:
         """#core nodes matching (label, value predicate) per partition — the
-        paper's one-pass start-node metric used to seed the SNI file."""
-        from .state import apply_value_op  # local import to avoid cycle
-        counts = np.zeros(self.k, dtype=np.int64)
-        for p in self.parts:
-            lab = p.node_label[: p.n_core]
-            ok = np.ones(p.n_core, dtype=bool) if label_id == WILDCARD else lab == label_id
-            if value_op:
-                ok &= apply_value_op(value_op, p.node_value[: p.n_core], value)
-            counts[p.pid] = int(ok.sum())
-        return counts
+        paper's one-pass start-node metric used to seed the SNI file.
+        Computed from the whole-graph arrays + the assignment (a core node
+        of p is exactly a vertex assigned to p), so it never touches
+        ``parts`` — out-of-core graphs rank partitions without any shard
+        resident."""
+        return start_label_counts_from_arrays(
+            self.graph.node_label, self.graph.node_value, self.assignment,
+            self.k, label_id, value_op, value)
 
     def connected_components_per_partition(self) -> np.ndarray:
         """#connected components among each partition's *core* nodes using only
@@ -263,6 +272,23 @@ class PartitionedGraph:
         for p in self.parts:
             out[p.pid] = _count_components(p)
         return out
+
+
+def start_label_counts_from_arrays(node_label: np.ndarray,
+                                   node_value: np.ndarray,
+                                   assignment: np.ndarray, k: int,
+                                   label_id: int, value_op: int = 0,
+                                   value: float = 0.0) -> np.ndarray:
+    """The SNI seed computed from whole-graph arrays alone — one
+    implementation shared by ``PartitionedGraph.start_label_counts`` and
+    the disk catalog (storage/format.py), so predicate semantics can
+    never diverge between the in-RAM and out-of-core ranking paths."""
+    from .state import apply_value_op  # local import to avoid cycle
+    ok = (np.ones(node_label.shape[0], dtype=bool) if label_id == WILDCARD
+          else node_label == label_id)
+    if value_op:
+        ok = ok & apply_value_op(int(value_op), node_value, float(value))
+    return np.bincount(assignment[ok], minlength=k).astype(np.int64)
 
 
 def _count_components(p: PartitionArrays) -> int:

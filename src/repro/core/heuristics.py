@@ -95,14 +95,16 @@ def choose_top_p(heuristic: str, eligible: Sequence[int],
 
 
 def rank_partitions_shared(heuristic: str,
-                           waiting: Mapping[int, Sequence[Tuple[int, float]]],
-                           rng: np.random.Generator) -> List[int]:
+                           waiting: Mapping[int, Sequence[Tuple]],
+                           rng: np.random.Generator,
+                           fairness_gamma: float = 0.0) -> List[int]:
     """Workload-level ranking: order candidate partitions best-first by the
     total expected yield over every pending query waiting on them.
 
     ``waiting`` maps pid -> the per-waiting-query ``(sni_count,
-    completion_rate)`` observations for that partition (one tuple per
-    query whose SNI/IMA makes the partition eligible).  Scores:
+    completion_rate)`` or ``(sni_count, completion_rate, rounds_waiting)``
+    observations for that partition (one tuple per query whose SNI/IMA
+    makes the partition eligible).  Base scores:
 
       MAX-SN           : Σ_q sni_q(p)            — most shared pending work
       MAX-YIELD-SHARED : Σ_q sni_q(p) × rate_q(p) — most expected completed
@@ -110,19 +112,38 @@ def rank_partitions_shared(heuristic: str,
                          Laplace-smoothed per-query observations MAX-YIELD
                          uses, so a fresh workload degrades to MAX-SN/2)
 
+    Fairness under skew: a query whose partitions nobody shares has a
+    yield that never dominates a hot partition's, so pure yield ranking
+    can starve it for as long as hot traffic keeps arriving.  With
+    ``fairness_gamma > 0`` every waiter contributes an *aging* term
+    ``gamma × sni_q(p) × rounds_waiting_q`` on top of the base score —
+    linear in how many scheduler rounds the query has been passed over —
+    so any starving query's partition eventually outranks every bounded
+    hot score and is guaranteed service within
+    ``O(max_hot_score / (gamma × sni))`` rounds.  ``gamma = 0`` (the
+    default) is exactly the pure-yield ranking.
+
     Ties are resolved randomly, matching ``rank_partitions``.
     """
     pids = sorted(waiting)
     if not pids:
         return []
+
+    def age_of(obs: Tuple) -> float:
+        return float(obs[2]) if len(obs) > 2 else 0.0
+
     if heuristic == MAX_SN:
-        scores = [float(sum(sni for sni, _ in waiting[p])) for p in pids]
+        scores = [float(sum(obs[0] for obs in waiting[p])) for p in pids]
     elif heuristic == MAX_YIELD_SHARED:
-        scores = [float(sum(sni * rate for sni, rate in waiting[p]))
+        scores = [float(sum(obs[0] * obs[1] for obs in waiting[p]))
                   for p in pids]
     else:
         raise ValueError(f"unknown shared heuristic {heuristic!r} "
                          f"(one of {SHARED_HEURISTICS})")
+    if fairness_gamma:
+        scores = [s + fairness_gamma * sum(obs[0] * age_of(obs)
+                                           for obs in waiting[p])
+                  for s, p in zip(scores, pids)]
     tie = rng.permutation(len(pids))
     order = sorted(range(len(pids)), key=lambda i: (-scores[i], int(tie[i])))
     return [pids[i] for i in order]

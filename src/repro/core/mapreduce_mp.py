@@ -114,7 +114,7 @@ class MapReduceMPEngine:
     def _build(self, plan_pad_steps: int):
         cfg = self.cfg
         Np = self.pg.node_pad
-        W = self.pg.parts[0].ell_width
+        W = self.pg.ell_width
         Q, S = cfg.q_pad, cfg.s_pad
         CAP = cfg.cap
         EB = min(cfg.expand_block, CAP + Np)
@@ -368,7 +368,9 @@ class MapReduceMPEngine:
                          answers_requested=max_answers,
                          cold_loads=delta.cold_loads,
                          warm_loads=delta.warm_loads,
-                         prefetch_hits=delta.prefetch_hits)
+                         prefetch_hits=delta.prefetch_hits,
+                         disk_reads=delta.disk_reads,
+                         read_ahead_hits=delta.read_ahead_hits)
         return MapReduceMPResult(answers=answers, stats=stats,
                                  n_iterations=n_iter)
 

@@ -47,6 +47,12 @@ class RunStats:
     cold_loads: Optional[int] = None
     warm_loads: Optional[int] = None
     prefetch_hits: Optional[int] = None
+    # out-of-core (disk-backed) residency for this run: shard reads the
+    # store's host tier issued against disk, and how many host gets were
+    # served by a background read-ahead instead of a blocking demand read.
+    # Zero for in-RAM sessions; None on hand-built RunStats.
+    disk_reads: Optional[int] = None
+    read_ahead_hits: Optional[int] = None
 
     @property
     def n_loads(self) -> int:

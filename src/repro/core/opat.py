@@ -85,9 +85,8 @@ class OPATEngine:
         self.pg = pg
         self.cfg = cfg or EngineConfig()
         assert pg.node_pad > 0, "build_partitions(uniform_pad=True) required"
-        w = pg.parts[0].ell_width
-        assert all(p.ell_width == w for p in pg.parts), "uniform ELL width required"
-        self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
+        self._eval = make_partition_evaluator(pg.node_pad, pg.ell_width,
+                                              self.cfg)
         self._beval = None
         self.store = store if store is not None else PartitionStore(pg)
         self.prefetch = prefetch
@@ -194,7 +193,9 @@ class OPATEngine:
                          answers_requested=max_answers,
                          cold_loads=delta.cold_loads,
                          warm_loads=delta.warm_loads,
-                         prefetch_hits=delta.prefetch_hits)
+                         prefetch_hits=delta.prefetch_hits,
+                         disk_reads=delta.disk_reads,
+                         read_ahead_hits=delta.read_ahead_hits)
         return OPATResult(answers=answers, stats=stats, state=st)
 
     def run_request(self, req: RunRequest) -> RunReport:

@@ -94,6 +94,8 @@ class _Job:
     retired: bool = False
     load_stats: LoadStats = dataclasses.field(default_factory=LoadStats)
     report: Optional[RunReport] = None   # sequential fallback: engine-built
+    rounds_waiting: int = 0              # consecutive rounds passed over
+                                         # (the fairness aging signal)
 
 
 @dataclasses.dataclass
@@ -142,16 +144,25 @@ class QueryScheduler:
     non-OPAT sequential fallback.  ``release_retired`` proactively frees
     store entries no pending job can use when a query retires (off by
     default: a warm entry is only worth dropping under memory pressure).
+    ``fairness_gamma`` weights the aging term (rounds-waiting × SNI) in
+    the shared ranking — 0 (default) is pure yield; any positive value
+    bounds how many rounds a no-overlap query can be passed over under a
+    skewed workload (see ``rank_partitions_shared``).
     """
 
     def __init__(self, session, *, heuristic: str = MAX_YIELD_SHARED,
                  seed: Optional[int] = None,
                  release_retired: bool = False,
-                 prefetch: Optional[bool] = None):
+                 prefetch: Optional[bool] = None,
+                 fairness_gamma: float = 0.0):
         if heuristic not in SHARED_HEURISTICS:
             raise ValueError(f"shared heuristic must be one of "
                              f"{SHARED_HEURISTICS}, got {heuristic!r}")
+        if fairness_gamma < 0.0:
+            raise ValueError(f"fairness_gamma must be >= 0, "
+                             f"got {fairness_gamma}")
         self.session = session
+        self.fairness_gamma = float(fairness_gamma)
         self.pg = session.pg
         self.store = session.store
         self.heuristic = heuristic
@@ -272,10 +283,13 @@ class QueryScheduler:
                         if id(j) not in rates:
                             rates[id(j)] = j.state.completion_rates()
             scored = {p: [(j.state.sni_count(p),
-                           rates[id(j)][p] if rates else 0.0)
+                           rates[id(j)][p] if rates else 0.0,
+                           j.rounds_waiting)
                           for j in js]
                       for p, js in waiters.items()}
-            ranked = rank_partitions_shared(self.heuristic, scored, rng)
+            ranked = rank_partitions_shared(
+                self.heuristic, scored, rng,
+                fairness_gamma=self.fairness_gamma)
             pid = int(ranked[0])
             batch = waiters[pid]
             ev0 = self.store.stats.copy()
@@ -299,10 +313,19 @@ class QueryScheduler:
                 rec = self._admitted[qid]
                 rec.load_stats = rec.load_stats + event
             self._touched.add(pid)
+            in_batch = {id(j) for j in batch}
             for j in batch:
                 j.load_stats = j.load_stats + event
                 j.state.loads.append(pid)
                 j.state.iterations += 1
+            # fairness aging: a pending job the chosen partition did NOT
+            # advance has waited one more round (core/heuristics.py turns
+            # rounds_waiting × SNI into a score bonus when fairness_gamma
+            # is set, bounding how long a no-overlap query can starve)
+            for j in self._jobs:
+                if not j.retired:
+                    j.rounds_waiting = 0 if id(j) in in_batch \
+                        else j.rounds_waiting + 1
 
     def _eval_batch(self, beval, entry, pid: int, batch: List[_Job]) -> None:
         """One compiled call advances every waiting job's plan against the
@@ -449,7 +472,9 @@ class QueryScheduler:
                             answers_requested=j.max_answers,
                             cold_loads=delta.cold_loads,
                             warm_loads=delta.warm_loads,
-                            prefetch_hits=delta.prefetch_hits),
+                            prefetch_hits=delta.prefetch_hits,
+                            disk_reads=delta.disk_reads,
+                            read_ahead_hits=delta.read_ahead_hits),
                         engine="opat", extra={"state": j.state})
                 reports.append(rep)
                 a = rep.answers

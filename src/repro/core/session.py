@@ -32,6 +32,11 @@ loads (workload-level MAX-YIELD-SHARED ordering, batched partition
 evaluation on the OPAT path), each retires independently on its own
 budget, and the workload profile absorbs every result exactly as single
 submits do.
+
+``save(path)`` / ``open(path)`` round the partitioned graph through disk
+(src/repro/storage/): a saved *graph directory* reopens as an
+out-of-core session whose partitions stream through the store's
+disk → pinned-host → device cache tiers with identical answers.
 """
 from __future__ import annotations
 
@@ -90,6 +95,14 @@ class GraphSession:
     ``PartitionedGraph`` (then ``graph``/``k``/``scheme`` are taken from
     it); ``mesh`` is required context for MapReduceMP on >1 device
     (defaults to a 1-D mesh over all local devices).
+
+    Out of core: ``GraphSession.open(path)`` builds a session over a
+    ``save``d graph directory — partitions stay disk-resident behind a
+    three-tier cache, with ``host_cache_parts`` / ``host_cache_bytes``
+    sizing the pinned-host LRU and ``read_ahead`` enabling the
+    background-thread disk staging of the heuristic's runner-up (both
+    are ignored for in-RAM sessions, whose host tier is the whole graph).
+    See docs/storage.md.
     """
 
     def __init__(self, graph: Optional[Graph] = None, *,
@@ -100,6 +113,9 @@ class GraphSession:
                  config: Optional[EngineConfig] = None,
                  cache_parts: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
+                 host_cache_parts: Optional[int] = None,
+                 host_cache_bytes: Optional[int] = None,
+                 read_ahead: bool = True,
                  processors: int = 2,
                  prefetch: bool = True,
                  seed: int = 0,
@@ -122,10 +138,18 @@ class GraphSession:
         # remembered so repartition() can rebuild the stack identically
         self._cache_parts = cache_parts
         self._cache_bytes = cache_bytes
+        # the disk tier (out-of-core sessions, GraphSession.open): a
+        # DiskCatalog the store's host LRU reads shards from, plus that
+        # LRU's sizing and read-ahead switch (storage/host_cache.py)
+        self._backing = getattr(pg, "backing", None)
+        self._host_cache_parts = host_cache_parts
+        self._host_cache_bytes = host_cache_bytes
+        self._read_ahead = read_ahead
         self._processors = processors
         self._prefetch = prefetch
         self._mesh = mesh
         self.repartitions = 0
+        self.store: Optional[PartitionStore] = None
         self._bind(pg)
 
     def _bind(self, pg: PartitionedGraph) -> None:
@@ -136,11 +160,19 @@ class GraphSession:
         at the new store), and the per-partition profile counters (old pids
         name different vertex sets, so old counts are not observations of
         the new layout)."""
+        if self.store is not None:
+            # join in-flight read-aheads and drop every cache tier: no
+            # stale host/device entry of an old layout can ever be served
+            self.store.close()
         self.pg = pg
         self.scheme = pg.scheme
         self.k = pg.k
         self.store = PartitionStore(pg, capacity_parts=self._cache_parts,
-                                    capacity_bytes=self._cache_bytes)
+                                    capacity_bytes=self._cache_bytes,
+                                    backing=self._backing,
+                                    host_cache_parts=self._host_cache_parts,
+                                    host_cache_bytes=self._host_cache_bytes,
+                                    read_ahead=self._read_ahead)
         engine = self.engine_name
         if engine == "opat":
             from .opat import OPATEngine
@@ -214,25 +246,30 @@ class GraphSession:
 
     def scheduler(self, heuristic: Optional[str] = None,
                   seed: Optional[int] = None,
-                  release_retired: bool = False) -> "Any":
+                  release_retired: bool = False,
+                  fairness_gamma: float = 0.0) -> "Any":
         """A ``QueryScheduler`` bound to this session's store, engine, and
         catalog (core/scheduler.py) — the multi-query serving loop.
         ``heuristic`` is a *shared* ranking (default MAX-YIELD-SHARED);
-        prefer ``submit_many`` unless you need streaming admission, since
-        only ``submit_many`` feeds results into the workload profile."""
+        ``fairness_gamma`` weights the anti-starvation aging term
+        (rounds-waiting × SNI) in that ranking.  Prefer ``submit_many``
+        unless you need streaming admission, since only ``submit_many``
+        feeds results into the workload profile."""
         from .heuristics import MAX_YIELD_SHARED
         from .scheduler import QueryScheduler
         return QueryScheduler(
             self,
             heuristic=heuristic if heuristic is not None else MAX_YIELD_SHARED,
-            seed=seed, release_retired=release_retired)
+            seed=seed, release_retired=release_retired,
+            fairness_gamma=fairness_gamma)
 
     def submit_many(self, queries: Sequence[Union[Query, DisjunctiveQuery]],
                     max_answers: Union[None, int,
                                        Sequence[Optional[int]]] = None,
                     heuristic: Optional[str] = None,
                     seed: Optional[int] = None,
-                    release_retired: bool = False) -> "Any":
+                    release_retired: bool = False,
+                    fairness_gamma: float = 0.0) -> "Any":
         """Serve a batch of queries through the shared-load scheduler and
         return its ``ScheduleReport`` (``.results`` holds one
         ``QueryResult`` per query, in input order).  ``max_answers`` is
@@ -255,7 +292,8 @@ class GraphSession:
         else:
             budgets = [max_answers] * len(queries)
         sched = self.scheduler(heuristic=heuristic, seed=seed,
-                               release_retired=release_retired)
+                               release_retired=release_retired,
+                               fairness_gamma=fairness_gamma)
         for q, b in zip(queries, budgets):
             sched.admit(q, max_answers=b)
         report = sched.run()
@@ -337,6 +375,9 @@ class GraphSession:
             # the [V] assignment the counters refer to, so a saved profile
             # is self-contained for repartition_assignment()
             "assignment": self.pg.assignment.astype(int).tolist(),
+            # out-of-core sessions: disk_reads / read_ahead_* land here too
+            # (the LoadStats dict is field-complete by construction)
+            "out_of_core": self.out_of_core,
             "cache": self.store.stats.to_dict(),
         }
 
@@ -345,6 +386,66 @@ class GraphSession:
         input of ``core/repartition.py`` (and the CI serve artifact)."""
         with open(path, "w") as f:
             json.dump(self.workload_profile(), f, indent=2)
+
+    # -- out-of-core storage (src/repro/storage/) --------------------------
+
+    @property
+    def out_of_core(self) -> bool:
+        """True when partitions are disk-resident (session built by
+        ``open``; a later ``repartition()`` moves back in-RAM until the
+        new layout is ``save``d)."""
+        return self._backing is not None
+
+    def save(self, path: str) -> Dict[str, Any]:
+        """Write this session's partitioned graph as a *graph directory*
+        (storage/format.py: ``manifest.json`` + one ``part-<pid>.npz``
+        shard per partition + ``graph.npz``); returns the manifest.
+        Works for in-RAM and disk-opened sessions alike (the latter
+        streams shards one at a time, never holding the graph's partition
+        bytes in memory); the manifest is written last, so an interrupted
+        save never yields an openable directory and re-saving over a live
+        one leaves the old shards intact until the fresh manifest lands.
+        """
+        from ..storage.format import save_partitioned_graph
+        return save_partitioned_graph(self.pg, path)
+
+    @classmethod
+    def open(cls, path: str, *,
+             engine: str = "opat",
+             heuristic: str = MAX_SN,
+             config: Optional[EngineConfig] = None,
+             cache_parts: Optional[int] = None,
+             cache_bytes: Optional[int] = None,
+             host_cache_parts: Optional[int] = None,
+             host_cache_bytes: Optional[int] = None,
+             read_ahead: bool = True,
+             processors: int = 2,
+             prefetch: bool = True,
+             seed: int = 0,
+             mesh: Optional[Any] = None,
+             verify_checksums: bool = True) -> "GraphSession":
+        """Open a ``save``d graph directory as an *out-of-core* session.
+
+        Partition shards stay on disk; the store serves them through a
+        three-tier cache — device LRU (``cache_parts``/``cache_bytes``)
+        over a pinned-host LRU (``host_cache_parts``/``host_cache_bytes``,
+        None = unbounded) over disk — and ``read_ahead`` pulls the
+        heuristic's runner-up off disk on a background thread while the
+        current partition evaluates.  Heuristic ranking and scheduler
+        admission read the manifest catalog, so they never touch a shard.
+        Answers are identical to a session over the in-RAM graph; only
+        residency (and ``LoadStats.disk_reads`` / ``read_ahead_hits``)
+        differs.
+        """
+        from ..storage.format import DiskCatalog, OutOfCorePartitionedGraph
+        backing = DiskCatalog(path, verify_checksums=verify_checksums)
+        pg = OutOfCorePartitionedGraph(backing)
+        return cls(pg=pg, engine=engine, heuristic=heuristic, config=config,
+                   cache_parts=cache_parts, cache_bytes=cache_bytes,
+                   host_cache_parts=host_cache_parts,
+                   host_cache_bytes=host_cache_bytes, read_ahead=read_ahead,
+                   processors=processors, prefetch=prefetch, seed=seed,
+                   mesh=mesh)
 
     # -- the WawPart loop --------------------------------------------------
 
@@ -371,6 +472,13 @@ class GraphSession:
         cfg = config if config is not None else RepartitionConfig()
         before = partition_quality(self.graph, self.pg.assignment, self.k)
         new_pg = _repart(self.pg, prof, seed=seed, config=cfg)
+        # a disk-opened session's backing names the OLD layout's shards —
+        # drop it before rebinding so the fresh store pins the new in-RAM
+        # partitions instead (and _bind closes the old store, joining any
+        # in-flight read-ahead and invalidating its host-cache entries).
+        # The graph directory on disk is untouched until save() writes
+        # the new layout back (fresh manifest last).
+        self._backing = None
         self._bind(new_pg)
         self.repartitions += 1
         after = partition_quality(self.graph, new_pg.assignment, self.k)

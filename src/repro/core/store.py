@@ -45,6 +45,18 @@ Entries come in two shapes, matching how the engines consume partitions:
 
 Both return committed jax Arrays, so repeated jit calls reuse the same
 device buffers instead of re-transferring host memory.
+
+Out-of-core backing (PR 5): pass ``backing=DiskCatalog`` (storage/) and
+the store becomes the top of a THREE-tier cache — a device miss falls
+through to a pinned-host LRU (``host_cache_parts`` / ``host_cache_bytes``,
+storage/host_cache.py), a host miss to a disk shard read (``disk_reads``
+counter); ``prefetch(pid)`` of a partition that is not host-resident
+issues a background-thread *read-ahead* instead of blocking on disk, so
+the heuristic's runner-up overlaps the current partition's evaluation at
+the disk tier exactly as it already does at the device tier
+(``read_ahead_issued`` / ``read_ahead_hits``).  Without a backing the
+host tier is the whole graph pinned in RAM — the pre-PR behaviour,
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -55,7 +67,6 @@ from typing import Any, Dict, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
-from .engine import part_to_device_dict
 from .graph import PartitionedGraph
 
 # a cache key: one partition id, or an ordered tuple of them (stacked entry)
@@ -75,6 +86,16 @@ class LoadStats:
     bytes_prefetched: int = 0    # bytes transferred off the critical path
     released: int = 0            # entries release()d by a caller (scheduler
                                  # retirement: no pending query needs them)
+    # out-of-core (disk-backed) tier counters — structurally zero when the
+    # store has no backing (the whole graph is pinned in host RAM):
+    disk_reads: int = 0          # shard reads issued against the disk tier
+                                 # (demand + read-ahead: total disk traffic)
+    read_ahead_issued: int = 0   # background-thread shard reads started
+    read_ahead_hits: int = 0     # host gets served by a completed/in-flight
+                                 # read-ahead (the disk latency overlapped
+                                 # evaluation instead of blocking a get)
+    bytes_disk: int = 0          # bytes read off disk (demand + read-ahead)
+    host_evictions: int = 0      # host-LRU entries dropped to fit capacity
 
     @property
     def warm_loads(self) -> int:
@@ -137,7 +158,11 @@ class PartitionStore:
     def __init__(self, pg: PartitionedGraph,
                  capacity_parts: Optional[int] = None,
                  capacity_bytes: Optional[int] = None,
-                 max_stacked_entries: Optional[int] = 8):
+                 max_stacked_entries: Optional[int] = 8,
+                 backing: Optional[Any] = None,
+                 host_cache_parts: Optional[int] = None,
+                 host_cache_bytes: Optional[int] = None,
+                 read_ahead: bool = True):
         if capacity_parts is not None and capacity_parts < 1:
             raise ValueError(f"capacity_parts must be >= 1, got {capacity_parts}")
         if capacity_bytes is not None and capacity_bytes < 1:
@@ -155,9 +180,18 @@ class PartitionStore:
         # without limit
         self.max_stacked_entries = max_stacked_entries
         self.stats = LoadStats()
-        # host staging copies (always resident; the "disk" tier in the
-        # paper's terms) — built once, the device cache stages from these
-        self._host = [part_to_device_dict(p) for p in pg.parts]
+        self.backing = backing
+        # the host tier the device cache stages from: the whole graph
+        # pinned in RAM (no backing — pre-PR-5 behaviour), or a
+        # disk-backed host LRU with background read-ahead (out of core)
+        if backing is not None:
+            from ..storage.host_cache import HostShardCache
+            self._host_tier: Any = HostShardCache(
+                backing, self.stats, capacity_parts=host_cache_parts,
+                capacity_bytes=host_cache_bytes, read_ahead=read_ahead)
+        else:
+            from ..storage.host_cache import HostArrayTier
+            self._host_tier = HostArrayTier(pg)
         self._cache: "OrderedDict[Any, StoreEntry]" = OrderedDict()
         self._owner_dev: Optional[jax.Array] = None
 
@@ -173,7 +207,13 @@ class PartitionStore:
     @property
     def part_keys(self):
         """Key set of the evaluator input dict (shared by every entry)."""
-        return self._host[0].keys()
+        return self._host_tier.part_keys
+
+    @property
+    def host_tier(self):
+        """The disk→host staging tier (storage/host_cache.py); pinned
+        arrays when the store has no backing."""
+        return self._host_tier
 
     # -- residency queries -------------------------------------------------
 
@@ -186,8 +226,7 @@ class PartitionStore:
         return bool(self._cache_keys_for(key))
 
     def host_nbytes(self, pid: int) -> int:
-        return sum(np.asarray(v).nbytes for v in self._host[pid].values()) \
-            + self.pg.g2l[pid].nbytes
+        return self._host_tier.nbytes(int(pid))
 
     # -- loads -------------------------------------------------------------
 
@@ -207,12 +246,18 @@ class PartitionStore:
         return self._lookup(key, sharding=sharding)
 
     def prefetch(self, pid: int) -> bool:
-        """Stage ``pid`` off the critical path (async ``device_put``); a
-        later ``get(pid)`` then never pays a cold transfer.  Returns True
-        when a transfer was actually issued (False: already resident)."""
+        """Stage ``pid`` off the critical path; a later ``get(pid)`` then
+        never pays the staged tier's latency.  Host-resident partitions
+        get the async ``device_put`` (pre-PR-5 behaviour); with a disk
+        backing, a partition not yet in host RAM gets a background-thread
+        *read-ahead* instead — device staging now would block this thread
+        on the disk read, defeating the overlap.  Returns True when work
+        was actually issued (False: already resident / in flight)."""
         pid = int(pid)
         if pid in self._cache:
             return False
+        if not self._host_tier.resident(pid):
+            return self._host_tier.read_ahead(pid)
         entry = self._stage(pid, sharding=None)
         entry.prefetched = True
         self.stats.prefetch_issued += 1
@@ -241,7 +286,17 @@ class PartitionStore:
         return ok
 
     def clear(self) -> None:
+        """Drop every device entry (the host tier is untouched: cleared
+        device residency is a serving experiment, not an invalidation)."""
         self._cache.clear()
+
+    def close(self) -> None:
+        """Release both cache tiers and join any in-flight read-ahead —
+        the teardown hook ``GraphSession`` calls before rebinding, so a
+        repartitioned session can never be served stale host entries of
+        the old layout."""
+        self._cache.clear()
+        self._host_tier.clear()
 
     # -- internals ---------------------------------------------------------
 
@@ -274,16 +329,19 @@ class PartitionStore:
         return entry
 
     def _stage(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
-        """Build the host bundle and dispatch its device transfer
-        (``device_put`` is asynchronous: it returns immediately with
-        arrays whose data lands on the device in the background)."""
+        """Pull the host bundle through the host tier (a pinned-array
+        lookup, a host-LRU hit, or a disk shard read) and dispatch its
+        device transfer (``device_put`` is asynchronous: it returns
+        immediately with arrays whose data lands on the device in the
+        background)."""
         if isinstance(key, tuple):
-            host = {k: np.stack([self._host[p][k] for p in key])
-                    for k in self._host[key[0]].keys()}
-            g2l = self.pg.g2l[np.asarray(key, dtype=np.int64)]
+            bundles = [self._host_tier.get(p) for p in key]
+            host = {k: np.stack([b.part[k] for b in bundles])
+                    for k in bundles[0].part.keys()}
+            g2l = np.stack([np.asarray(b.g2l) for b in bundles])
         else:
-            host = self._host[key]
-            g2l = self.pg.g2l[key]
+            bundle = self._host_tier.get(key)
+            host, g2l = bundle.part, np.asarray(bundle.g2l)
         nbytes = sum(np.asarray(v).nbytes for v in host.values()) + g2l.nbytes
         if sharding is not None:
             dev = {k: jax.device_put(v, sharding) for k, v in host.items()}

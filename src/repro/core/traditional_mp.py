@@ -48,8 +48,8 @@ class TraditionalMPEngine:
         self.pg = pg
         self.p = n_processors
         self.cfg = cfg or EngineConfig()
-        w = pg.parts[0].ell_width
-        self._eval = make_partition_evaluator(pg.node_pad, w, self.cfg)
+        self._eval = make_partition_evaluator(pg.node_pad, pg.ell_width,
+                                              self.cfg)
         # vmapped over (partition arrays, g2l row, inputs); plan broadcast
         self._veval = jax.jit(jax.vmap(
             self._eval, in_axes=(0, 0, None, None, None, 0, 0, 0, 0)))
@@ -180,7 +180,9 @@ class TraditionalMPEngine:
                          answers_requested=max_answers,
                          cold_loads=delta.cold_loads,
                          warm_loads=delta.warm_loads,
-                         prefetch_hits=delta.prefetch_hits)
+                         prefetch_hits=delta.prefetch_hits,
+                         disk_reads=delta.disk_reads,
+                         read_ahead_hits=delta.read_ahead_hits)
         return TraditionalMPResult(answers=answers, stats=stats,
                                    state=st, partitions_per_iteration=per_iter)
 

@@ -25,6 +25,14 @@ Two serving modes:
     round-trip.  ``--verify`` keeps the same oracle exit-code contract in
     both modes.
 
+Out-of-core serving: ``--save-graph DIR`` persists the session's
+partitioned graph as a graph directory (storage/format.py), and
+``--graph-dir DIR`` reopens it with partition shards disk-resident
+behind the three-tier cache (``--host-cache-parts`` sizes the pinned
+host LRU, ``--no-read-ahead`` disables the background disk read-ahead);
+``--dataset``/``--seed`` then only name the query batch.  The report
+gains the disk-tier counters (``disk_reads``, ``read_ahead_hits``).
+
 The WawPart loop end to end: serve once with ``--profile-json p.json``,
 then serve the same dataset/flags with ``--repartition-from p.json`` — the
 session re-lays the graph out from the observed traffic (scheme ``"waw"``)
@@ -59,18 +67,28 @@ from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)
 
 
+def load_queries(name: str, graph, seed: int):
+    """The dataset's query batch, built against ``graph`` (which may be a
+    freshly generated graph or one reopened from a ``--graph-dir``)."""
+    if name == "imdb":
+        return imdb_queries(graph, seed=seed)
+    if name == "synthetic":
+        return subgen_queries(graph)
+    raise ValueError(name)
+
+
 def load_dataset(name: str, scale: float, seed: int):
     if name == "imdb":
         g = imdb_like_graph(n_movies=int(300 * scale),
                             n_people=int(400 * scale),
                             n_companies=max(4, int(40 * scale)), seed=seed)
-        return g, imdb_queries(g, seed=seed)
-    if name == "synthetic":
+    elif name == "synthetic":
         g = subgen_like_graph(n_nodes=int(2000 * scale),
                               n_edges=int(6000 * scale),
                               n_embed=max(5, int(50 * scale)), seed=seed)
-        return g, subgen_queries(g)
-    raise ValueError(name)
+    else:
+        raise ValueError(name)
+    return g, load_queries(name, g, seed)
 
 
 def main() -> None:
@@ -95,6 +113,24 @@ def main() -> None:
                          "device-resident)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable OPAT's runner-up partition prefetch")
+    ap.add_argument("--graph-dir", default="", metavar="DIR",
+                    help="serve OUT OF CORE from this saved graph "
+                         "directory (GraphSession.open): partition shards "
+                         "stay on disk behind the host/device cache tiers;"
+                         " --dataset/--seed then only name the query "
+                         "batch, and --k/--scheme come from the manifest")
+    ap.add_argument("--save-graph", default="", metavar="DIR",
+                    help="after building (and optionally repartitioning) "
+                         "the session, save its partitioned graph as a "
+                         "graph directory reopenable via --graph-dir")
+    ap.add_argument("--host-cache-parts", type=int, default=None,
+                    help="with --graph-dir: pinned-host LRU capacity in "
+                         "partitions between disk and device (default: "
+                         "unbounded — every shard read stays host-"
+                         "resident)")
+    ap.add_argument("--no-read-ahead", action="store_true",
+                    help="with --graph-dir: disable the background-thread "
+                         "disk read-ahead of the heuristic's runner-up")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="check answers against the whole-graph oracle")
@@ -122,10 +158,35 @@ def main() -> None:
                     choices=list(SHARED_HEURISTICS),
                     help="workload-level partition ranking used by "
                          "--workload batch mode")
+    ap.add_argument("--fairness-gamma", type=float, default=0.0,
+                    help="aging weight (rounds-waiting x SNI) in the "
+                         "shared ranking of --workload batch mode; 0 = "
+                         "pure yield, >0 bounds starvation of no-overlap "
+                         "queries under skew")
     args = ap.parse_args()
 
-    graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
-    print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
+    t0 = time.time()
+    if args.graph_dir:
+        session = GraphSession.open(args.graph_dir,
+                                    engine=args.engine,
+                                    heuristic=args.heuristic,
+                                    config=EngineConfig(cap=args.cap),
+                                    cache_parts=args.cache_parts,
+                                    host_cache_parts=args.host_cache_parts,
+                                    read_ahead=not args.no_read_ahead,
+                                    processors=args.processors,
+                                    prefetch=not args.no_prefetch,
+                                    seed=args.seed)
+        graph = session.graph
+        dqueries = load_queries(args.dataset, graph, args.seed)
+        print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} "
+              f"edges (opened out of core from {args.graph_dir}: "
+              f"{session.pg.backing.total_part_bytes()} shard bytes on "
+              f"disk, host cache "
+              f"{args.host_cache_parts or 'unbounded'} parts)")
+    else:
+        graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
+        print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
 
     if args.emit_workload:
         with open(args.emit_workload, "w") as f:
@@ -135,16 +196,16 @@ def main() -> None:
               f"{args.emit_workload}")
         return
 
-    t0 = time.time()
-    session = GraphSession(graph, k=args.k, scheme=args.scheme,
-                           engine=args.engine, heuristic=args.heuristic,
-                           config=EngineConfig(cap=args.cap),
-                           cache_parts=args.cache_parts,
-                           processors=args.processors,
-                           prefetch=not args.no_prefetch,
-                           seed=args.seed)
-    q = partition_quality(graph, session.pg.assignment, args.k)
-    print(f"[serve] session: k={args.k} scheme={args.scheme} "
+    if not args.graph_dir:
+        session = GraphSession(graph, k=args.k, scheme=args.scheme,
+                               engine=args.engine, heuristic=args.heuristic,
+                               config=EngineConfig(cap=args.cap),
+                               cache_parts=args.cache_parts,
+                               processors=args.processors,
+                               prefetch=not args.no_prefetch,
+                               seed=args.seed)
+    q = partition_quality(graph, session.pg.assignment, session.k)
+    print(f"[serve] session: k={session.k} scheme={session.scheme} "
           f"engine={args.engine} cut={q['cut']} ({q['cut_frac']:.1%}) "
           f"sizes={q['sizes']} "
           f"total_cc={total_connected_components(session.pg)} "
@@ -160,6 +221,13 @@ def main() -> None:
               f"sizes={q['sizes']} "
               f"total_cc={total_connected_components(session.pg)}")
 
+    if args.save_graph:
+        manifest = session.save(args.save_graph)
+        total = sum(p["nbytes"] for p in manifest["partitions"])
+        print(f"[serve] saved graph directory {args.save_graph}: "
+              f"k={manifest['k']} scheme={manifest['scheme']} "
+              f"{total} shard bytes (reopen with --graph-dir)")
+
     throughput = None
     if args.workload:
         with open(args.workload) as f:
@@ -170,7 +238,8 @@ def main() -> None:
               f"{args.workload} via the shared scheduler "
               f"({args.shared_heuristic})")
         report = session.submit_many(wqueries, max_answers=budgets,
-                                     heuristic=args.shared_heuristic)
+                                     heuristic=args.shared_heuristic,
+                                     fairness_gamma=args.fairness_gamma)
         lat = [r.latency_s for r in report.results]
         qps = (len(report.results) / report.wall_s if report.wall_s else 0.0)
         throughput = {
@@ -186,6 +255,9 @@ def main() -> None:
             "cold_loads": report.load_stats.cold_loads,
             "warm_loads": report.load_stats.warm_loads,
             "prefetch_hits": report.load_stats.prefetch_hits,
+            "disk_reads": report.load_stats.disk_reads,
+            "read_ahead_hits": report.load_stats.read_ahead_hits,
+            "fairness_gamma": args.fairness_gamma,
         }
         served = zip(wqueries, report.results, budgets)
     else:
@@ -209,7 +281,9 @@ def main() -> None:
                "loads": n_loads, "l_ideal": l_ideal, "iterations": iters,
                "latency_s": res.latency_s,
                "cold_loads": ls.cold_loads, "warm_loads": ls.warm_loads,
-               "prefetch_hits": ls.prefetch_hits}
+               "prefetch_hits": ls.prefetch_hits,
+               "disk_reads": ls.disk_reads,
+               "read_ahead_hits": ls.read_ahead_hits}
         if args.verify:
             from repro.core.oracle import match_disjunctive
             ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
@@ -249,6 +323,12 @@ def main() -> None:
           f"{cache['prefetch_issued']} prefetches "
           f"({cache['prefetch_hits']} hit), "
           f"{cache['bytes_cold']} cold bytes")
+    if session.out_of_core:
+        print(f"[serve] disk tier: {cache['disk_reads']} shard reads "
+              f"({cache['bytes_disk']} bytes), "
+              f"{cache['read_ahead_issued']} read-aheads "
+              f"({cache['read_ahead_hits']} hit), "
+              f"{cache['host_evictions']} host evictions")
 
     if args.json or args.profile_json:
         # built once: the profile embeds two [V]-length arrays, so don't

@@ -1,0 +1,22 @@
+"""Out-of-core partition storage: the disk tier under ``PartitionStore``.
+
+  format.py      — versioned graph-directory layout (manifest.json +
+                   part-<pid>.npz shards, sha256 checksums), DiskCatalog,
+                   OutOfCorePartitionedGraph
+  host_cache.py  — the pinned-host LRU between disk and device, with
+                   background-thread read-ahead
+
+See docs/storage.md for the format and the three-tier cache semantics.
+"""
+from .format import (DiskCatalog, FORMAT_VERSION, OutOfCorePartitionedGraph,
+                     StorageFormatError, array_checksum,
+                     open_partitioned_graph, save_partitioned_graph,
+                     shard_name)
+from .host_cache import HostArrayTier, HostBundle, HostShardCache
+
+__all__ = [
+    "DiskCatalog", "FORMAT_VERSION", "OutOfCorePartitionedGraph",
+    "StorageFormatError", "array_checksum", "open_partitioned_graph",
+    "save_partitioned_graph", "shard_name",
+    "HostArrayTier", "HostBundle", "HostShardCache",
+]

@@ -1,0 +1,394 @@
+"""On-disk partition storage: a versioned shard-per-partition layout.
+
+The paper's founding premise is a graph too large for main memory, and
+its partitioned representation is exactly the unit that makes disk
+residency natural: every partition is already a fixed-geometry array
+bundle (core/graph.py), so the storage layer can treat "one partition"
+as "one shard file" and never needs to understand traversal semantics.
+Averbuch & Neumann (arXiv:1301.5121) make the case that partitioned graph
+stores live or die by their on-disk layout and cache behaviour; this
+module is the layout half (the cache half is storage/host_cache.py).
+
+A *graph directory* written by ``save_partitioned_graph`` holds:
+
+  manifest.json     — format version, partition geometry (k, scheme,
+                      node_pad / edge_pad / ell_width, cut_edges), the
+                      label vocabularies, and a per-partition catalog:
+                      shard file name, vertex / edge counts, connected
+                      components, byte size, a core-node label histogram,
+                      and a sha256 checksum per array.  Everything the
+                      heuristics need to *rank* partitions (SNI counts,
+                      MAX-YIELD admission) is derivable from the manifest
+                      plus ``graph.npz`` — no shard needs to be resident.
+  graph.npz         — the whole-graph host arrays (node labels / values,
+                      edge lists, the [V] partition assignment).  O(V+E)
+                      raw data; the padded, denormalized shard bundles
+                      below are the memory hog this tier keeps on disk.
+  part-<pid>-<key>.npz — one shard per partition: the evaluator input
+                      dict (``part_to_device_dict`` arrays, ELLPACK
+                      tiles included) plus that partition's g2l row.
+                      Written uncompressed so a round trip is
+                      bit-identical; ``<key>`` is a digest of the
+                      arrays' checksums (content-addressed).
+
+Durability: every file is written via temp + atomic rename, shard names
+are content-addressed, and the manifest is written LAST.  A directory
+without a manifest is simply not a graph directory, so an interrupted
+first ``save`` can never be opened; an interrupted RE-save leaves the
+old manifest naming the old (untouched) shard generation, so the old
+layout stays fully servable — changed shards land under new names, and
+superseded generations are garbage-collected only after the fresh
+manifest is live.
+
+``DiskCatalog`` opens a graph directory and serves shard reads (checksum
+verified) plus the manifest-level metrics; ``OutOfCorePartitionedGraph``
+is the ``PartitionedGraph`` the rest of the system sees — same fields and
+methods, but ``parts`` is empty and partition bytes only ever enter
+memory through the store's host/device cache tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph, LabelVocab, PartitionedGraph, WILDCARD
+
+FORMAT_VERSION = 1
+FORMAT_KIND = "pgqp-graph-dir"
+MANIFEST_NAME = "manifest.json"
+GRAPH_NAME = "graph.npz"
+
+
+class StorageFormatError(RuntimeError):
+    """A graph directory is missing, unversioned, or fails verification."""
+
+
+def shard_name(pid: int, content_key: str) -> str:
+    """Shard file names are CONTENT-ADDRESSED (pid + a digest of the
+    arrays' checksums): a re-save with changed content writes NEW files
+    while the old manifest keeps naming the old ones, so an interrupted
+    re-save can never mix layouts — the old directory stays fully live
+    until the fresh manifest lands, and identical content maps to the
+    identical (byte-identical) file."""
+    return f"part-{int(pid):05d}-{content_key}.npz"
+
+
+def _content_key(checksums: Dict[str, str]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(checksums):
+        h.update(k.encode())
+        h.update(checksums[k].encode())
+    return h.hexdigest()[:12]
+
+
+def _atomic_savez(path: str, arrs: Dict[str, np.ndarray]) -> None:
+    """Write an npz via temp file + rename, so a torn write can never be
+    mistaken for a shard (np.savez appends '.npz' to bare names, hence
+    the explicit file handle)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrs)
+    os.replace(tmp, path)
+
+
+def array_checksum(a: np.ndarray) -> str:
+    """sha256 over (dtype, shape, bytes) — shape/dtype are part of the
+    identity so a reshaped or recast array never passes as unchanged."""
+    a = np.ascontiguousarray(np.asarray(a))
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _shard_arrays(pg: PartitionedGraph, pid: int) -> Dict[str, np.ndarray]:
+    """One partition's shard content: evaluator inputs + its g2l row."""
+    from ..core.engine import part_to_device_dict
+    arrs = {k: np.asarray(v) for k, v in part_to_device_dict(pg.parts[pid]).items()}
+    arrs["g2l"] = np.asarray(pg.g2l[pid])
+    return arrs
+
+
+def _label_histogram(node_label: np.ndarray) -> List[List[int]]:
+    """Sparse [label_id, count] pairs over a partition's core nodes — the
+    manifest-level SNI input (start-node counts per label)."""
+    labels, counts = np.unique(node_label, return_counts=True)
+    return [[int(l), int(c)] for l, c in zip(labels, counts) if l >= 0]
+
+
+def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
+    """Write ``pg`` as a graph directory; returns the manifest dict.
+
+    Works for both in-RAM graphs (shards serialized from ``pg.parts``)
+    and disk-opened ones (shards streamed partition-at-a-time through the
+    backing catalog — never more than one partition's bytes in flight).
+    The manifest is written last, so the directory only becomes openable
+    once every shard it names is on disk.
+    """
+    assert pg.node_pad > 0, "uniform padding required (build_partitions default)"
+    os.makedirs(path, exist_ok=True)
+    backing: Optional[DiskCatalog] = getattr(pg, "backing", None)
+    g = pg.graph
+
+    parts_meta: List[Dict[str, Any]] = []
+    part_keys: Optional[List[str]] = None
+    for pid in range(pg.k):
+        if backing is not None:
+            arrs, g2l_row = backing.read_part(pid)
+            arrs = dict(arrs)
+            arrs["g2l"] = g2l_row
+        else:
+            arrs = _shard_arrays(pg, pid)
+        checksums = {k: array_checksum(v) for k, v in arrs.items()}
+        fname = shard_name(pid, _content_key(checksums))
+        _atomic_savez(os.path.join(path, fname), arrs)
+        core_mask = pg.assignment == pid
+        parts_meta.append({
+            "pid": pid,
+            "shard": fname,
+            "n_core": int(core_mask.sum()),
+            "n_nodes": int(np.asarray(arrs["node_gid"] >= 0).sum()),
+            "n_edges": int(np.asarray(arrs["ell_dst"] >= 0).sum()),
+            "nbytes": int(sum(np.asarray(v).nbytes for v in arrs.values())),
+            "components": 0,   # filled below in one pass over all partitions
+            "label_histogram": _label_histogram(
+                np.asarray(g.node_label)[core_mask]),
+            "checksums": checksums,
+        })
+        if part_keys is None:
+            part_keys = [k for k in arrs.keys() if k != "g2l"]
+    # one pass for the per-partition CC metric (paper Sec. 5.2) instead of
+    # the accidental O(k^2) of calling it inside the loop above
+    ccs = pg.connected_components_per_partition()
+    for meta in parts_meta:
+        meta["components"] = int(ccs[meta["pid"]])
+
+    np.savez(os.path.join(path, GRAPH_NAME),
+             node_label=g.node_label, node_value=g.node_value,
+             edge_src=g.edge_src, edge_dst=g.edge_dst,
+             edge_label=g.edge_label, edge_directed=g.edge_directed,
+             assignment=pg.assignment.astype(np.int32))
+
+    manifest = {
+        "kind": FORMAT_KIND,
+        "format_version": FORMAT_VERSION,
+        "scheme": pg.scheme,
+        "k": pg.k,
+        "node_pad": int(pg.node_pad),
+        "edge_pad": int(pg.edge_pad),
+        "ell_width": int(pg.ell_width),
+        "cut_edges": int(pg.cut_edges),
+        "n_nodes": int(g.n_nodes),
+        "n_edges": int(g.n_edges),
+        "part_keys": part_keys,
+        "node_vocab": [g.node_vocab.str_of(i) for i in range(len(g.node_vocab))],
+        "edge_vocab": [g.edge_vocab.str_of(i) for i in range(len(g.edge_vocab))],
+        "partitions": parts_meta,
+    }
+    tmp = os.path.join(path, MANIFEST_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2)
+    os.replace(tmp, os.path.join(path, MANIFEST_NAME))
+    # the manifest is live: garbage-collect shards of older generations
+    # (content-addressed names mean they were never touched by this save)
+    live = {m["shard"] for m in parts_meta}
+    for fname in os.listdir(path):
+        if fname.startswith("part-") and fname.endswith(".npz") \
+                and fname not in live:
+            os.remove(os.path.join(path, fname))
+    return manifest
+
+
+class DiskCatalog:
+    """An opened graph directory: manifest metrics + verified shard reads.
+
+    The catalog itself holds only O(V) state (the manifest and, lazily,
+    ``graph.npz``); partition shards are read on demand by the host cache
+    tier (storage/host_cache.py).  ``verify_checksums`` (default on)
+    checks every array's sha256 against the manifest at read time — a
+    torn or corrupted shard raises ``StorageFormatError`` instead of
+    silently producing wrong answers.
+    """
+
+    def __init__(self, path: str, verify_checksums: bool = True):
+        self.path = path
+        self.verify_checksums = verify_checksums
+        mpath = os.path.join(path, MANIFEST_NAME)
+        if not os.path.exists(mpath):
+            raise StorageFormatError(f"{path!r} has no {MANIFEST_NAME} — "
+                                     f"not a graph directory (or an "
+                                     f"interrupted save)")
+        with open(mpath) as f:
+            self.manifest = json.load(f)
+        if self.manifest.get("kind") != FORMAT_KIND:
+            raise StorageFormatError(f"unrecognized manifest kind "
+                                     f"{self.manifest.get('kind')!r}")
+        version = self.manifest.get("format_version")
+        if version != FORMAT_VERSION:
+            raise StorageFormatError(f"format_version {version} not "
+                                     f"supported (this build reads "
+                                     f"{FORMAT_VERSION})")
+        self._parts = {p["pid"]: p for p in self.manifest["partitions"]}
+        if sorted(self._parts) != list(range(self.k)):
+            raise StorageFormatError("manifest partition list is not "
+                                     f"0..{self.k - 1}")
+        self._global: Optional[Dict[str, np.ndarray]] = None
+
+    # -- manifest-level metadata -------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return int(self.manifest["k"])
+
+    @property
+    def scheme(self) -> str:
+        return self.manifest["scheme"]
+
+    @property
+    def part_keys(self) -> List[str]:
+        return list(self.manifest["part_keys"])
+
+    def part_meta(self, pid: int) -> Dict[str, Any]:
+        return self._parts[int(pid)]
+
+    def part_nbytes(self, pid: int) -> int:
+        return int(self._parts[int(pid)]["nbytes"])
+
+    def total_part_bytes(self) -> int:
+        return sum(int(p["nbytes"]) for p in self.manifest["partitions"])
+
+    def components_per_partition(self) -> np.ndarray:
+        return np.asarray([self._parts[p]["components"]
+                           for p in range(self.k)], dtype=np.int64)
+
+    # -- whole-graph arrays (O(V+E), loaded once on first use) -------------
+
+    def _globals(self) -> Dict[str, np.ndarray]:
+        if self._global is None:
+            with np.load(os.path.join(self.path, GRAPH_NAME)) as z:
+                self._global = {k: z[k] for k in z.files}
+        return self._global
+
+    @property
+    def assignment(self) -> np.ndarray:
+        return self._globals()["assignment"]
+
+    def load_graph(self) -> Graph:
+        """Rebuild the host ``Graph`` (planner / oracle / profile input)."""
+        g = self._globals()
+        node_vocab, edge_vocab = LabelVocab(), LabelVocab()
+        for s in self.manifest["node_vocab"]:
+            node_vocab.intern(s)
+        for s in self.manifest["edge_vocab"]:
+            edge_vocab.intern(s)
+        graph = Graph(
+            n_nodes=int(self.manifest["n_nodes"]),
+            node_label=g["node_label"], node_value=g["node_value"],
+            edge_src=g["edge_src"], edge_dst=g["edge_dst"],
+            edge_label=g["edge_label"], edge_directed=g["edge_directed"],
+            node_vocab=node_vocab, edge_vocab=edge_vocab)
+        graph.validate()
+        return graph
+
+    # -- the ranking input: SNI counts without any shard resident ----------
+
+    def start_label_counts(self, label_id: int, value_op: int = 0,
+                           value: float = 0.0) -> np.ndarray:
+        """#core nodes matching (label, value predicate) per partition.
+
+        Pure label queries are answered from the manifest's per-partition
+        label histograms alone; value predicates additionally consult the
+        O(V) ``graph.npz`` node arrays (through the same helper the
+        in-RAM path uses, so semantics cannot diverge).  Partition shards
+        are never read.
+        """
+        if not value_op:
+            counts = np.zeros(self.k, dtype=np.int64)
+            for pid in range(self.k):
+                hist = self._parts[pid]["label_histogram"]
+                if label_id == WILDCARD:
+                    counts[pid] = sum(c for _, c in hist)
+                else:
+                    counts[pid] = next((c for l, c in hist
+                                        if l == int(label_id)), 0)
+            return counts
+        from ..core.graph import start_label_counts_from_arrays
+        g = self._globals()
+        return start_label_counts_from_arrays(
+            g["node_label"], g["node_value"], g["assignment"], self.k,
+            label_id, value_op, value)
+
+    # -- shard reads --------------------------------------------------------
+
+    def shard_path(self, pid: int) -> str:
+        return os.path.join(self.path, self._parts[int(pid)]["shard"])
+
+    def read_part(self, pid: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """One shard off disk: (evaluator input dict, g2l row), checksum
+        verified against the manifest when ``verify_checksums``."""
+        pid = int(pid)
+        with np.load(self.shard_path(pid)) as z:
+            arrs = {k: z[k] for k in z.files}
+        if self.verify_checksums:
+            want = self._parts[pid]["checksums"]
+            for k, a in arrs.items():
+                got = array_checksum(a)
+                if got != want.get(k):
+                    raise StorageFormatError(
+                        f"checksum mismatch on partition {pid} array "
+                        f"{k!r} ({self.shard_path(pid)}): shard is "
+                        f"corrupt or was written by a different layout")
+        g2l = arrs.pop("g2l")
+        return arrs, g2l
+
+
+class OutOfCorePartitionedGraph(PartitionedGraph):
+    """A ``PartitionedGraph`` whose partition arrays live on disk.
+
+    Same dataclass fields and methods as the in-RAM class — engines,
+    sessions, and the scheduler are oblivious — except:
+
+      * ``parts`` is empty and ``g2l`` is ``None``: partition bytes only
+        enter memory through ``PartitionStore``'s host/device tiers
+        (each shard carries its own g2l row);
+      * ``start_label_counts`` / ``connected_components_per_partition``
+        answer from the manifest catalog, so heuristic ranking and
+        scheduler admission never touch a shard;
+      * ``backing`` is the ``DiskCatalog`` the store reads shards from.
+    """
+
+    def __init__(self, catalog: DiskCatalog, graph: Optional[Graph] = None):
+        m = catalog.manifest
+        graph = graph if graph is not None else catalog.load_graph()
+        assignment = np.asarray(catalog.assignment, dtype=np.int32)
+        super().__init__(
+            graph=graph, k=catalog.k, assignment=assignment, parts=[],
+            owner=assignment.copy(), g2l=None,
+            cut_edges=int(m["cut_edges"]),
+            node_pad=int(m["node_pad"]), edge_pad=int(m["edge_pad"]),
+            scheme=m["scheme"])
+        self.backing = catalog
+        self._ell_width = int(m["ell_width"])
+
+    @property
+    def ell_width(self) -> int:
+        return self._ell_width
+
+    def start_label_counts(self, label_id: int, value_op: int = 0,
+                           value: float = 0.0) -> np.ndarray:
+        return self.backing.start_label_counts(label_id, value_op, value)
+
+    def connected_components_per_partition(self) -> np.ndarray:
+        return self.backing.components_per_partition()
+
+
+def open_partitioned_graph(path: str, verify_checksums: bool = True
+                           ) -> OutOfCorePartitionedGraph:
+    """Open a graph directory as an out-of-core ``PartitionedGraph``."""
+    return OutOfCorePartitionedGraph(DiskCatalog(path, verify_checksums))

@@ -1,0 +1,239 @@
+"""The pinned-host tier of the three-level partition cache.
+
+``PartitionStore`` (core/store.py) owns device residency; this module
+owns what sits between the device and the disk:
+
+  disk (DiskCatalog shards)  →  host LRU (here)  →  device LRU (store)
+
+Two implementations share one small protocol — ``get(pid)`` returning a
+``HostBundle``, ``resident``, ``read_ahead``, ``nbytes``, ``clear``:
+
+``HostArrayTier``  — the in-RAM case (a session built from a live
+    ``PartitionedGraph``): every partition's host bundle is always
+    resident, exactly the pre-PR behaviour.  ``read_ahead`` is a no-op.
+
+``HostShardCache`` — the out-of-core case: an LRU of host bundles
+    (capacity in partitions or bytes) backed by a ``DiskCatalog``.
+    ``read_ahead(pid)`` starts a background thread that pulls the shard
+    off disk while the caller keeps evaluating — the host-tier mirror of
+    the store's device prefetch, so the heuristic's runner-up partition
+    is in host RAM by the time its turn comes.  A later ``get`` joins
+    the thread (a ``read_ahead_hit``: the disk latency overlapped useful
+    work) instead of paying a demand read on the critical path.
+
+Counter attribution (LoadStats, core/store.py): ``disk_reads`` and
+``bytes_disk`` are incremented on the *calling* thread at issue time —
+for demand reads and read-aheads alike — so snapshots/deltas taken by
+the engines and the scheduler's round-scoped accounting never race the
+worker thread; the worker only moves bytes.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, NamedTuple, Optional
+
+import numpy as np
+
+
+class HostBundle(NamedTuple):
+    """One partition's host-resident staging unit."""
+
+    part: Dict[str, np.ndarray]   # evaluator input dict
+    g2l: np.ndarray               # that partition's [V] g2l row
+    nbytes: int
+
+
+def bundle_nbytes(part: Dict[str, np.ndarray], g2l: np.ndarray) -> int:
+    return int(sum(np.asarray(v).nbytes for v in part.values())
+               + np.asarray(g2l).nbytes)
+
+
+class HostArrayTier:
+    """All partitions pinned in host RAM (built once from a live pg)."""
+
+    def __init__(self, pg):
+        from ..core.engine import part_to_device_dict
+        self._bundles = [
+            HostBundle(part=(d := part_to_device_dict(p)),
+                       g2l=pg.g2l[p.pid],
+                       nbytes=bundle_nbytes(d, pg.g2l[p.pid]))
+            for p in pg.parts]
+
+    @property
+    def part_keys(self):
+        return self._bundles[0].part.keys()
+
+    def resident(self, pid: int) -> bool:
+        return True
+
+    def get(self, pid: int) -> HostBundle:
+        return self._bundles[int(pid)]
+
+    def read_ahead(self, pid: int) -> bool:
+        return False   # nothing to stage: everything is already host-resident
+
+    def nbytes(self, pid: int) -> int:
+        return self._bundles[int(pid)].nbytes
+
+    def clear(self) -> None:
+        pass   # pinned bundles are the graph itself; nothing to invalidate
+
+
+class HostShardCache:
+    """Disk-backed host LRU with background read-ahead.
+
+    ``stats`` is the owning store's ``LoadStats``; this tier increments
+    ``disk_reads`` / ``bytes_disk`` / ``read_ahead_issued`` /
+    ``read_ahead_hits`` / ``host_evictions`` on it (main thread only,
+    see module docstring).  With no capacity the tier holds every shard
+    it has ever read — the "unbounded host cache" configuration that
+    degrades gracefully to the in-RAM behaviour after one pass.
+    """
+
+    def __init__(self, catalog, stats,
+                 capacity_parts: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None,
+                 read_ahead: bool = True):
+        if capacity_parts is not None and capacity_parts < 1:
+            raise ValueError(f"host capacity_parts must be >= 1, "
+                             f"got {capacity_parts}")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError(f"host capacity_bytes must be >= 1, "
+                             f"got {capacity_bytes}")
+        self.catalog = catalog
+        self.stats = stats
+        self.capacity_parts = capacity_parts
+        self.capacity_bytes = capacity_bytes
+        self.read_ahead_enabled = read_ahead
+        self._cache: "OrderedDict[int, HostBundle]" = OrderedDict()
+        self._pending: Dict[int, threading.Thread] = {}
+        self._errors: Dict[int, BaseException] = {}
+        # pids whose cache entry landed via read-ahead and has not been
+        # touched by get() yet (the first get counts a read_ahead_hit)
+        self._prefetched: set = set()
+        self._lock = threading.Lock()
+
+    @property
+    def part_keys(self):
+        return self.catalog.part_keys
+
+    def resident(self, pid: int) -> bool:
+        """Host-resident NOW — an in-flight read-ahead does not count
+        (the store must not try to device-stage a pid whose bytes are
+        still on their way: its host get would block on the worker)."""
+        with self._lock:
+            return int(pid) in self._cache
+
+    def nbytes(self, pid: int) -> int:
+        return self.catalog.part_nbytes(pid)
+
+    def get(self, pid: int) -> HostBundle:
+        pid = int(pid)
+        with self._lock:
+            worker = self._pending.get(pid)
+        if worker is not None:
+            worker.join()   # the worker inserts into the cache itself
+        with self._lock:
+            err = self._errors.pop(pid, None)
+            if err is not None:
+                raise err   # e.g. StorageFormatError from a corrupt shard
+            got = self._cache.get(pid)
+            if got is not None:
+                self._cache.move_to_end(pid)
+                if pid in self._prefetched:
+                    self._prefetched.discard(pid)
+                    self.stats.read_ahead_hits += 1
+                return got
+        # demand read: disk on the critical path
+        self.stats.disk_reads += 1
+        part, g2l = self.catalog.read_part(pid)
+        bundle = HostBundle(part=part, g2l=g2l,
+                            nbytes=bundle_nbytes(part, g2l))
+        self.stats.bytes_disk += bundle.nbytes
+        with self._lock:
+            self._insert(pid, bundle)
+        return bundle
+
+    def read_ahead(self, pid: int) -> bool:
+        """Start pulling ``pid`` off disk on a background thread; returns
+        True when a read was actually issued (False: resident, already in
+        flight, or read-ahead disabled).  The worker lands its bundle in
+        the LRU itself (under the host budget, evicting as needed) and
+        removes itself from the pending set, so a read-ahead nobody ever
+        ``get``s is still capacity-bounded and thread-clean; a worker
+        failure (corrupt shard, IO error) is re-raised by the next
+        ``get(pid)`` instead of being swallowed."""
+        pid = int(pid)
+        if not self.read_ahead_enabled:
+            return False
+        with self._lock:
+            if pid in self._cache or pid in self._pending:
+                return False
+        # counters on the calling thread (see module docstring); nbytes
+        # comes from the manifest, so no shard I/O happens here
+        self.stats.disk_reads += 1
+        self.stats.read_ahead_issued += 1
+        self.stats.bytes_disk += self.nbytes(pid)
+
+        def _work() -> None:
+            try:
+                part, g2l = self.catalog.read_part(pid)
+                bundle = HostBundle(part=part, g2l=g2l,
+                                    nbytes=bundle_nbytes(part, g2l))
+                with self._lock:
+                    self._pending.pop(pid, None)
+                    self._insert(pid, bundle)
+                    self._prefetched.add(pid)
+            except BaseException as e:   # surfaced by the next get(pid)
+                with self._lock:
+                    self._pending.pop(pid, None)
+                    self._errors[pid] = e
+
+        t = threading.Thread(target=_work, daemon=True,
+                             name=f"read-ahead-part-{pid}")
+        with self._lock:
+            self._pending[pid] = t
+        t.start()
+        return True
+
+    def clear(self) -> None:
+        """Drop every host entry and join in-flight read-aheads — the
+        invalidation hook ``repartition()`` relies on (stale shards of an
+        old layout must never be served)."""
+        with self._lock:
+            pending = list(self._pending.values())
+        for t in pending:
+            t.join()
+        with self._lock:
+            self._pending.clear()
+            self._errors.clear()
+            self._prefetched.clear()
+            self._cache.clear()
+
+    # -- internals (callers hold self._lock) -------------------------------
+
+    def _insert(self, pid: int, bundle: HostBundle) -> None:
+        self._cache[pid] = bundle
+        self._cache.move_to_end(pid)
+        self._prefetched.discard(pid)   # a demand insert is not a prefetch
+        self._evict(keep=pid)
+
+    def _evict(self, keep: int) -> None:
+        def over() -> bool:
+            if self.capacity_parts is not None \
+                    and len(self._cache) > self.capacity_parts:
+                return True
+            if self.capacity_bytes is not None \
+                    and sum(b.nbytes for b in self._cache.values()) \
+                    > self.capacity_bytes:
+                return True
+            return False
+
+        while over():
+            victim = next((p for p in self._cache if p != keep), None)
+            if victim is None:
+                break   # the just-read shard alone exceeds the budget
+            del self._cache[victim]
+            self._prefetched.discard(victim)
+            self.stats.host_evictions += 1

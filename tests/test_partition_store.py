@@ -202,6 +202,34 @@ def test_load_stats_delta_and_validation(setup):
         PartitionStore(pg).get_stacked(())
 
 
+def test_load_stats_arithmetic_is_field_complete():
+    """Satellite (ISSUE-5): __add__/__sub__/to_dict cover EVERY counter
+    field via dataclasses.fields — including the disk-tier counters
+    (disk_reads / read_ahead_hits & co.) — so a future field cannot
+    silently drop out of delta/sum accounting."""
+    import dataclasses as dc
+    fields = [f.name for f in dc.fields(LoadStats)]
+    # the disk tier's headline counters exist and default to zero
+    for name in ("disk_reads", "read_ahead_issued", "read_ahead_hits",
+                 "bytes_disk", "host_evictions"):
+        assert name in fields
+    a = LoadStats(**{f: 3 * i + 1 for i, f in enumerate(fields)})
+    b = LoadStats(**{f: i for i, f in enumerate(fields)})
+    add, sub = a + b, a - b
+    for i, f in enumerate(fields):
+        assert getattr(add, f) == (3 * i + 1) + i, f
+        assert getattr(sub, f) == (3 * i + 1) - i, f
+    d = a.to_dict()
+    for f in fields:
+        assert d[f] == getattr(a, f), f
+    # derived keys ride along without displacing any raw field
+    assert d["cold_loads"] == a.misses and d["warm_loads"] == a.hits
+    assert 0.0 <= d["hit_rate"] <= 1.0
+    # a zero-initialized LoadStats is the identity for both operations
+    zero = LoadStats()
+    assert (a + zero) == a and (a - zero) == a
+
+
 @pytest.mark.parametrize("capacity", [1, 2, 4])
 def test_opat_answers_unchanged_under_tiny_cache(setup, capacity):
     """Eviction affects transfers, never correctness: capacities 1, 2, k."""

@@ -311,3 +311,57 @@ def test_shared_sweep_acceptance():
     assert sh.loads_per_query < iso.loads_per_query
     assert iso.qps > 0 and sh.qps > 0
     assert iso.n_answers == sh.n_answers > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler fairness under skew (ISSUE-5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_fairness_aging_bounds_starvation_rounds():
+    """A no-overlap query's partition (one waiter, SNI 1) can be passed
+    over forever by pure yield ranking while hot traffic keeps a big
+    shared score alive; the aging term (rounds-waiting x SNI, weighted by
+    fairness_gamma) guarantees it reaches rank 0 within a bounded number
+    of rounds."""
+    rng = np.random.default_rng(0)
+
+    def waiting(age):
+        # partition 0: three persistent hot waiters (base score 75);
+        # partition 9: the lone cold waiter, aged `age` rounds
+        return {0: [(50, 0.5, 0), (50, 0.5, 0), (50, 0.5, 0)],
+                9: [(1, 0.5, age)]}
+
+    # gamma = 0 (the default): starves at every age — pure yield
+    for age in (0, 10, 100, 10_000):
+        assert rank_partitions_shared(
+            MAX_YIELD_SHARED, waiting(age), rng)[0] == 0
+    # gamma > 0: served within ceil(hot_score / (gamma * sni)) rounds
+    gamma = 1.0
+    first = next(age for age in range(200) if rank_partitions_shared(
+        MAX_YIELD_SHARED, waiting(age), rng, fairness_gamma=gamma)[0] == 9)
+    assert first <= 75       # 0.5 + gamma*age > 75  <=>  age >= 75
+    # the same bound applies to the max-sn shared ranking (base 150)
+    first_sn = next(age for age in range(400) if rank_partitions_shared(
+        MAX_SN, waiting(age), rng, fairness_gamma=gamma)[0] == 9)
+    assert first_sn <= 150
+    # two-tuple observations (no age recorded) still rank — age reads 0
+    assert rank_partitions_shared(MAX_YIELD_SHARED,
+                                  {0: [(10, 0.5)], 1: [(1, 0.5)]},
+                                  rng, fairness_gamma=5.0)[0] == 0
+
+
+def test_fairness_gamma_threaded_and_semantics_preserved(setup):
+    """fairness_gamma reaches the shared ranking through submit_many /
+    scheduler() and never changes answer sets — only the load ORDER may
+    differ."""
+    g, dqueries, refs = setup
+    for gamma in (0.0, 2.5):
+        sess = make_session(g)
+        report = sess.submit_many(dqueries, fairness_gamma=gamma)
+        for r in report.results:
+            assert np.array_equal(r.answers, refs[r.name]), (gamma, r.name)
+    sess = make_session(g)
+    sched = sess.scheduler(fairness_gamma=1.5)
+    assert sched.fairness_gamma == 1.5
+    with pytest.raises(ValueError, match="fairness_gamma"):
+        sess.scheduler(fairness_gamma=-0.1)

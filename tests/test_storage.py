@@ -1,0 +1,473 @@
+"""Out-of-core partition storage (src/repro/storage/ + store backing).
+
+Covers the ISSUE-5 tentpole/acceptance list:
+  * shard round trip (``save`` -> ``DiskCatalog.read_part``) bit-identical
+    per partition, checksum-verified; corruption raises;
+  * manifest catalog answers SNI ranking (``start_label_counts``) and the
+    CC metric without touching a shard;
+  * host LRU semantics: capacity, eviction, demand reads vs read-ahead
+    (``disk_reads`` / ``read_ahead_issued`` / ``read_ahead_hits``);
+  * the three-tier fall-through: device miss -> host -> disk, with the
+    counters landing in ``LoadStats`` / ``RunStats`` / the profile;
+  * ``GraphSession.save``/``open``: answers identical to the in-RAM
+    session (oracle-verified) for every engine and the scheduler, on a
+    graph whose shard bytes exceed the host budget;
+  * ``repartition()`` on a disk-opened session: backing dropped, stale
+    host entries invalidated, old directory untouched until ``save``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GraphSession, LoadStats,
+                        PartitionStore, build_partitions, match_disjunctive,
+                        partition_graph)
+from repro.core.engine import part_to_device_dict
+from repro.data.generators import subgen_like_graph, subgen_queries
+from repro.storage import (DiskCatalog, HostShardCache,
+                           OutOfCorePartitionedGraph, StorageFormatError,
+                           array_checksum, save_partitioned_graph)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    g = subgen_like_graph(n_nodes=250, n_edges=700, n_embed=10, seed=3)
+    assign = partition_graph(g, 4, "kway_shem")
+    pg = build_partitions(g, assign, 4, scheme="kway_shem")
+    dqueries = subgen_queries(g)
+    refs = {dq.name: match_disjunctive(g, dq, q_pad=8) for dq in dqueries}
+    gdir = str(tmp_path_factory.mktemp("graph-dir"))
+    manifest = save_partitioned_graph(pg, gdir)
+    return g, pg, dqueries, refs, gdir, manifest
+
+
+# ---------------------------------------------------------------------------
+# format: shards, manifest, checksums
+# ---------------------------------------------------------------------------
+
+def test_shard_round_trip_bit_identical(setup):
+    """Acceptance: every partition's arrays survive the disk round trip
+    byte for byte (dtype, shape, and content)."""
+    g, pg, _, _, gdir, _ = setup
+    cat = DiskCatalog(gdir)
+    for pid in range(pg.k):
+        part, g2l = cat.read_part(pid)
+        want = part_to_device_dict(pg.parts[pid])
+        assert set(part.keys()) == set(want.keys())
+        for k in want:
+            a, b = np.asarray(part[k]), np.asarray(want[k])
+            assert a.dtype == b.dtype and a.shape == b.shape, (pid, k)
+            assert a.tobytes() == b.tobytes(), (pid, k)
+        assert np.asarray(g2l).tobytes() == pg.g2l[pid].tobytes()
+
+
+def test_manifest_catalog_metrics(setup):
+    g, pg, _, _, gdir, manifest = setup
+    assert manifest["format_version"] == 1
+    assert manifest["k"] == 4 and manifest["scheme"] == "kway_shem"
+    assert manifest["node_pad"] == pg.node_pad
+    assert manifest["ell_width"] == pg.ell_width
+    assert manifest["cut_edges"] == pg.cut_edges
+    cat = DiskCatalog(gdir)
+    # per-partition vertex/edge counts and CC match the live graph
+    assert np.array_equal(cat.components_per_partition(),
+                          pg.connected_components_per_partition())
+    for pid in range(pg.k):
+        meta = cat.part_meta(pid)
+        assert meta["n_core"] == pg.parts[pid].n_core
+        assert meta["n_nodes"] == pg.parts[pid].n_nodes
+        assert meta["nbytes"] > 0
+        hist = dict(map(tuple, meta["label_histogram"]))
+        assert sum(hist.values()) == pg.parts[pid].n_core
+    assert cat.total_part_bytes() == sum(cat.part_nbytes(p)
+                                         for p in range(pg.k))
+
+
+def test_start_label_counts_from_manifest_match_in_ram(setup):
+    """SNI ranking inputs come from the catalog (label histograms + the
+    O(V) node arrays for value predicates) and agree exactly with the
+    in-RAM computation, including wildcards and value predicates."""
+    from repro.core.graph import WILDCARD
+    from repro.core.query import OP_GT
+    g, pg, _, _, gdir, _ = setup
+    cat = DiskCatalog(gdir)
+    ooc = OutOfCorePartitionedGraph(cat)
+    labels = [WILDCARD, -3] + sorted({int(l) for l in g.node_label})[:6]
+    for lid in labels:
+        assert np.array_equal(ooc.start_label_counts(lid),
+                              pg.start_label_counts(lid)), lid
+        assert np.array_equal(ooc.start_label_counts(lid, OP_GT, 0.5),
+                              pg.start_label_counts(lid, OP_GT, 0.5)), lid
+
+
+def test_out_of_core_pg_mirrors_in_ram(setup):
+    g, pg, _, _, gdir, _ = setup
+    ooc = OutOfCorePartitionedGraph(DiskCatalog(gdir))
+    assert ooc.k == pg.k and ooc.scheme == pg.scheme
+    assert ooc.node_pad == pg.node_pad and ooc.ell_width == pg.ell_width
+    assert ooc.parts == [] and ooc.g2l is None
+    assert np.array_equal(ooc.assignment, pg.assignment)
+    assert np.array_equal(ooc.owner, pg.owner)
+    gg = ooc.graph
+    assert gg.n_nodes == g.n_nodes and gg.n_edges == g.n_edges
+    assert np.array_equal(gg.node_label, g.node_label)
+    for i in range(len(g.node_vocab)):
+        assert gg.node_vocab.str_of(i) == g.node_vocab.str_of(i)
+
+
+def test_checksum_catches_corruption(setup, tmp_path):
+    g, pg, _, _, _, _ = setup
+    gdir = str(tmp_path / "corrupt")
+    save_partitioned_graph(pg, gdir)
+    shard = DiskCatalog(gdir).shard_path(1)
+    with np.load(shard) as z:
+        arrs = {k: z[k] for k in z.files}
+    arrs["node_label"] = arrs["node_label"].copy()
+    arrs["node_label"][0] += 1
+    np.savez(shard, **arrs)
+    cat = DiskCatalog(gdir)
+    with pytest.raises(StorageFormatError, match="checksum"):
+        cat.read_part(1)
+    cat.read_part(0)                                   # others still fine
+    unchecked = DiskCatalog(gdir, verify_checksums=False)
+    unchecked.read_part(1)                             # opt-out honoured
+
+
+def test_open_rejects_non_graph_dirs(tmp_path):
+    with pytest.raises(StorageFormatError, match="manifest"):
+        DiskCatalog(str(tmp_path))
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "manifest.json").write_text(json.dumps(
+        {"kind": "pgqp-graph-dir", "format_version": 999}))
+    with pytest.raises(StorageFormatError, match="format_version"):
+        DiskCatalog(str(bad))
+
+
+def test_array_checksum_sensitivity():
+    a = np.arange(8, dtype=np.int32)
+    assert array_checksum(a) == array_checksum(a.copy())
+    assert array_checksum(a) != array_checksum(a.astype(np.int64))
+    assert array_checksum(a) != array_checksum(a.reshape(2, 4))
+    b = a.copy(); b[3] = 99
+    assert array_checksum(a) != array_checksum(b)
+
+
+def test_save_writes_manifest_last_and_resave_is_clean(setup, tmp_path):
+    """The repartition/save round-trip satellite: saving over a live
+    directory replaces shards and only then the manifest, and a directory
+    without a manifest is not openable."""
+    g, pg, _, _, _, _ = setup
+    gdir = tmp_path / "resave"
+    save_partitioned_graph(pg, str(gdir))
+    before = DiskCatalog(str(gdir)).manifest
+    save_partitioned_graph(pg, str(gdir))              # idempotent re-save
+    after = DiskCatalog(str(gdir)).manifest
+    assert before["partitions"] == after["partitions"]
+    assert not (gdir / "manifest.json.tmp").exists()   # temp file cleaned
+
+
+# ---------------------------------------------------------------------------
+# the host LRU tier
+# ---------------------------------------------------------------------------
+
+def test_host_cache_lru_and_demand_reads(setup):
+    g, pg, _, _, gdir, _ = setup
+    stats = LoadStats()
+    tier = HostShardCache(DiskCatalog(gdir), stats, capacity_parts=2)
+    b0 = tier.get(0)
+    assert stats.disk_reads == 1 and stats.bytes_disk == b0.nbytes
+    assert tier.get(0) is b0                        # host hit: no new read
+    assert stats.disk_reads == 1
+    tier.get(1)
+    tier.get(0)                                     # refresh 0
+    tier.get(2)                                     # evicts 1 (LRU)
+    assert stats.host_evictions == 1
+    assert tier.resident(0) and tier.resident(2) and not tier.resident(1)
+    tier.get(1)                                     # re-read costs disk again
+    assert stats.disk_reads == 4
+    with pytest.raises(ValueError):
+        HostShardCache(DiskCatalog(gdir), LoadStats(), capacity_parts=0)
+
+
+def test_host_cache_read_ahead_overlap(setup):
+    g, pg, _, _, gdir, _ = setup
+    stats = LoadStats()
+    tier = HostShardCache(DiskCatalog(gdir), stats, capacity_parts=4)
+    assert tier.read_ahead(3) is True
+    assert tier.read_ahead(3) is False              # already in flight
+    assert stats.disk_reads == 1 and stats.read_ahead_issued == 1
+    got = tier.get(3)                               # joins the worker
+    assert stats.read_ahead_hits == 1
+    want = part_to_device_dict(pg.parts[3])
+    for k in want:
+        assert np.asarray(got.part[k]).tobytes() == \
+            np.asarray(want[k]).tobytes(), k
+    assert tier.read_ahead(3) is False              # resident now
+    # disabled read-ahead never spawns work
+    off = HostShardCache(DiskCatalog(gdir), LoadStats(), read_ahead=False)
+    assert off.read_ahead(0) is False
+
+
+def test_store_three_tier_fall_through(setup):
+    """Device miss -> host -> disk: a bounded device cache over a bounded
+    host cache pays disk reads on re-staging, and prefetch() of a
+    non-host-resident partition becomes a background read-ahead instead
+    of a blocking device staging."""
+    g, pg, _, _, gdir, _ = setup
+    cat = DiskCatalog(gdir)
+    ooc = OutOfCorePartitionedGraph(cat)
+    store = PartitionStore(ooc, capacity_parts=1, backing=cat,
+                           host_cache_parts=1)
+    store.get(0)
+    assert store.stats.disk_reads == 1 and store.stats.misses == 1
+    store.get(0)                                    # device warm: no traffic
+    assert store.stats.hits == 1 and store.stats.disk_reads == 1
+    store.get(1)                                    # evicts 0 in BOTH tiers
+    store.get(0)                                    # full fall-through again
+    assert store.stats.disk_reads == 3
+    assert store.stats.evictions >= 1 and store.stats.host_evictions >= 1
+    # prefetch of a non-host-resident pid issues a read-ahead, not a
+    # device staging; the later get joins it (read_ahead_hit) and pays
+    # only the device transfer on the critical path
+    issued0 = store.stats.read_ahead_issued
+    assert store.prefetch(2) is True
+    assert store.stats.read_ahead_issued == issued0 + 1
+    assert not store.contains(2)                    # no device entry yet
+    store.get(2)
+    assert store.stats.read_ahead_hits >= 1
+    # byte-identical to the in-RAM staging
+    ram = PartitionStore(pg)
+    for k in ram.get(2).part:
+        assert np.asarray(store.get(2).part[k]).tobytes() == \
+            np.asarray(ram.get(2).part[k]).tobytes(), k
+
+
+def test_store_stacked_entries_from_disk(setup):
+    """TraditionalMP/MapReduceMP-shaped stacked bundles stage through the
+    host tier too, identical to the in-RAM stack."""
+    g, pg, _, _, gdir, _ = setup
+    cat = DiskCatalog(gdir)
+    store = PartitionStore(OutOfCorePartitionedGraph(cat), backing=cat,
+                           host_cache_parts=2)
+    ram = PartitionStore(pg)
+    a, b = store.get_stacked((2, 0, 1)), ram.get_stacked((2, 0, 1))
+    for k in b.part:
+        assert np.asarray(a.part[k]).tobytes() == \
+            np.asarray(b.part[k]).tobytes(), k
+    assert np.asarray(a.g2l).tobytes() == np.asarray(b.g2l).tobytes()
+    assert store.stats.disk_reads == 3
+
+
+# ---------------------------------------------------------------------------
+# GraphSession.save / open
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_name", ["opat", "traditional", "mapreduce"])
+def test_open_serves_identical_answers(setup, tmp_path, engine_name):
+    """Acceptance: a disk-opened session with a host cache below the
+    graph's shard bytes serves oracle-identical answers for every engine,
+    with real disk traffic and (on the OPAT prefetch path) read-ahead
+    overlap."""
+    g, pg, dqueries, refs, _, _ = setup
+    k = 1 if engine_name == "mapreduce" else 4      # 1 partition per device
+    sess = GraphSession(g, k=k, scheme="kway_shem", engine=engine_name,
+                        seed=1, processors=2, config=EngineConfig(cap=32768))
+    gdir = str(tmp_path / f"g-{engine_name}")
+    manifest = sess.save(gdir)
+    hc = 2 if k > 2 else None
+    ooc = GraphSession.open(gdir, engine=engine_name, seed=1, processors=2,
+                            config=EngineConfig(cap=32768),
+                            cache_parts=hc, host_cache_parts=hc)
+    assert ooc.out_of_core and ooc.k == k and ooc.scheme == "kway_shem"
+    if hc is not None:
+        total = sum(p["nbytes"] for p in manifest["partitions"])
+        assert total > hc * max(p["nbytes"] for p in manifest["partitions"])
+    for dq in dqueries:
+        res = ooc.submit(dq)
+        assert np.array_equal(res.answers, refs[dq.name]), \
+            (engine_name, dq.name)
+    st = ooc.load_stats
+    assert st.disk_reads > 0
+    if engine_name == "opat":
+        assert st.read_ahead_hits > 0
+        rep = ooc.submit(dqueries[0]).reports[0]
+        assert rep.stats.disk_reads is not None      # threaded into RunStats
+    prof = ooc.workload_profile()
+    assert prof["out_of_core"] is True
+    assert prof["cache"]["disk_reads"] == st.disk_reads
+
+
+def test_open_scheduler_batch_identical(setup, tmp_path):
+    g, pg, dqueries, refs, gdir, _ = setup
+    ooc = GraphSession.open(gdir, engine="opat", seed=1, cache_parts=2,
+                            host_cache_parts=2,
+                            config=EngineConfig(cap=32768))
+    report = ooc.submit_many(dqueries, fairness_gamma=0.25)
+    assert len(report.results) == len(dqueries)
+    for r in report.results:
+        assert np.array_equal(r.answers, refs[r.name]), r.name
+    assert report.load_stats.disk_reads > 0
+
+
+def test_repartition_drops_backing_and_resaves(setup, tmp_path):
+    """Satellite: repartition() on a disk-opened session invalidates the
+    stale host-cache entries (fresh store, no backing), keeps serving
+    correctly from RAM, leaves the old directory untouched, and save()
+    round-trips the new layout under a fresh manifest."""
+    g, pg, dqueries, refs, _, _ = setup
+    gdir = str(tmp_path / "orig")
+    GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1).save(gdir)
+    sess = GraphSession.open(gdir, engine="opat", seed=1, host_cache_parts=2,
+                             config=EngineConfig(cap=32768))
+    for dq in dqueries:
+        sess.submit(dq)
+    old_manifest = DiskCatalog(gdir).manifest
+    info = sess.repartition()
+    assert info["scheme"] == "waw"
+    assert not sess.out_of_core                      # backing dropped
+    assert sess.store.backing is None
+    assert sess.load_stats.disk_reads == 0           # fresh counters, no disk
+    for dq in dqueries:                              # serves from RAM, same
+        assert np.array_equal(sess.submit(dq).answers, refs[dq.name])
+    # the old directory is untouched until save() writes the new layout
+    assert DiskCatalog(gdir).manifest == old_manifest
+    new_dir = str(tmp_path / "waw")
+    sess.save(new_dir)
+    re = GraphSession.open(new_dir, engine="opat", seed=1,
+                           config=EngineConfig(cap=32768))
+    assert re.scheme == "waw"
+    for dq in dqueries:
+        assert np.array_equal(re.submit(dq).answers, refs[dq.name])
+
+
+def test_ooc_save_streams_shards_bit_identical(setup, tmp_path):
+    """save() of a disk-opened session copies shards through the backing
+    (one partition in flight at a time) bit-identically."""
+    g, pg, _, _, gdir, _ = setup
+    ooc = GraphSession.open(gdir, engine="opat", seed=1, host_cache_parts=1)
+    copy_dir = str(tmp_path / "copy")
+    ooc.save(copy_dir)
+    a, b = DiskCatalog(gdir), DiskCatalog(copy_dir)
+    for pid in range(4):
+        assert a.part_meta(pid)["checksums"] == b.part_meta(pid)["checksums"]
+        pa, ga = a.read_part(pid)
+        pb, gb = b.read_part(pid)
+        for k in pa:
+            assert np.asarray(pa[k]).tobytes() == np.asarray(pb[k]).tobytes()
+        assert np.asarray(ga).tobytes() == np.asarray(gb).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# review-hardening regressions
+# ---------------------------------------------------------------------------
+
+def test_read_ahead_worker_failure_surfaces_real_error(setup, tmp_path):
+    """A corrupt shard read on the background thread must re-raise the
+    real StorageFormatError at the next get(), not a bare KeyError."""
+    g, pg, _, _, _, _ = setup
+    gdir = str(tmp_path / "ra-corrupt")
+    save_partitioned_graph(pg, gdir)
+    cat = DiskCatalog(gdir)
+    shard = cat.shard_path(2)
+    with np.load(shard) as z:
+        arrs = {k: z[k] for k in z.files}
+    arrs["node_value"] = arrs["node_value"].copy()
+    arrs["node_value"][0] = 123.0
+    np.savez(shard, **arrs)
+    stats = LoadStats()
+    tier = HostShardCache(cat, stats)
+    assert tier.read_ahead(2) is True
+    with pytest.raises(StorageFormatError, match="checksum"):
+        tier.get(2)
+    assert not tier.resident(2)
+    # the error is consumed: a later get retries the (still corrupt) read
+    with pytest.raises(StorageFormatError, match="checksum"):
+        tier.get(2)
+
+
+def test_unconsumed_read_ahead_stays_within_host_budget(setup):
+    """Read-ahead bundles nobody ever get()s land in the LRU itself —
+    bounded by the host budget, with no pending-thread leak."""
+    import time as _time
+    g, pg, _, _, gdir, _ = setup
+    stats = LoadStats()
+    tier = HostShardCache(DiskCatalog(gdir), stats, capacity_parts=2)
+    for pid in (0, 1, 2, 3):
+        assert tier.read_ahead(pid) is True
+    deadline = _time.time() + 10.0
+    while tier._pending and _time.time() < deadline:
+        _time.sleep(0.01)
+    assert not tier._pending                      # workers self-cleaned
+    assert len(tier._cache) <= 2                  # budget enforced
+    assert stats.host_evictions >= 2
+    # a get of a still-resident read-ahead is a hit; of an evicted one,
+    # a plain demand read — never a stale counter
+    resident = list(tier._cache)
+    tier.get(resident[-1])
+    assert stats.read_ahead_hits == 1
+
+
+def test_prefetch_of_in_flight_read_ahead_does_not_block(setup):
+    """store.prefetch of a pid whose read-ahead is still in flight must
+    return without joining the worker (resident() is cache-only)."""
+    import threading as _threading
+    g, pg, _, _, gdir, _ = setup
+
+    class SlowCatalog:
+        """Delegates to a real catalog, gating reads on an event."""
+
+        def __init__(self, inner):
+            self._inner = inner
+            self.gate = _threading.Event()
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def read_part(self, pid):
+            self.gate.wait(timeout=10.0)
+            return self._inner.read_part(pid)
+
+    slow = SlowCatalog(DiskCatalog(gdir))
+    ooc = OutOfCorePartitionedGraph(DiskCatalog(gdir))
+    store = PartitionStore(ooc, backing=slow, host_cache_parts=2)
+    assert store.prefetch(1) is True              # read-ahead issued
+    # second prefetch while the worker is gated: no staging, no join
+    assert store.prefetch(1) is False
+    assert store.stats.read_ahead_issued == 1
+    slow.gate.set()
+    entry = store.get(1)                          # joins, stages to device
+    assert store.stats.read_ahead_hits == 1
+    ram = PartitionStore(pg)
+    for k in ram.get(1).part:
+        assert np.asarray(entry.part[k]).tobytes() == \
+            np.asarray(ram.get(1).part[k]).tobytes(), k
+
+
+def test_resave_changed_content_uses_new_shard_generation(setup, tmp_path):
+    """Content-addressed shards: re-saving a DIFFERENT layout into a live
+    directory writes new file names (the old manifest's generation stays
+    untouched until the fresh manifest lands) and garbage-collects the
+    superseded generation afterwards."""
+    g, pg, dqueries, refs, _, _ = setup
+    gdir = str(tmp_path / "gen")
+    sess = GraphSession(g, k=4, scheme="kway_shem", engine="opat", seed=1,
+                        config=EngineConfig(cap=32768))
+    m1 = sess.save(gdir)
+    names1 = {p["shard"] for p in m1["partitions"]}
+    for dq in dqueries:
+        sess.submit(dq)
+    sess.repartition()                             # a different layout
+    m2 = sess.save(gdir)
+    names2 = {p["shard"] for p in m2["partitions"]}
+    assert names1 != names2                        # new generation
+    on_disk = {f for f in os.listdir(gdir)
+               if f.startswith("part-") and f.endswith(".npz")}
+    assert on_disk == names2                       # old generation GC'd
+    re = GraphSession.open(gdir, engine="opat", seed=1,
+                           config=EngineConfig(cap=32768))
+    assert re.scheme == "waw"
+    for dq in dqueries:
+        assert np.array_equal(re.submit(dq).answers, refs[dq.name])
