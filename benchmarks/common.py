@@ -36,6 +36,17 @@ from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries,
                                    waw_skewed_graph, waw_skewed_queries)
 
+# this module is the import hub for the benchmark drivers: the names below
+# are re-exported for paper_tables.py / mp_scaling.py / track.py even when
+# unused here
+__all__ = [
+    "ALL_HEURISTICS", "BUDGET_HEURISTICS", "EngineConfig", "GraphSession",
+    "MAX_SN", "MAX_YIELD", "MAX_YIELD_SHARED", "MIN_SN", "RANDOM_SN",
+    "RunStats", "SCHEMES", "avg_load_ratio_across_schemes",
+    "avg_load_ratio_for_batch", "build_catalog", "build_partitions",
+    "generate_plan", "partition_graph",
+]
+
 K_PARTITIONS = 4   # the paper's experimental setting
 
 

@@ -15,11 +15,10 @@ import os
 import time
 from typing import List
 
-import numpy as np
 
 from .common import (EngineConfig, MAX_SN, build_catalog, build_partitions,
                      fmt_table, generate_plan, partition_graph)
-from repro.core import OPATEngine, TraditionalMPEngine
+from repro.core import TraditionalMPEngine
 from repro.data.generators import subgen_like_graph, subgen_queries
 
 

@@ -18,14 +18,13 @@ from __future__ import annotations
 
 import csv
 import os
-from typing import Dict, List
+from typing import List
 
-import numpy as np
 
-from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN,
-                     RANDOM_SN, SCHEMES, BudgetSweepResult, OocoreSweepResult,
-                     SharedSweepResult, SweepResult, WawSweepResult, fmt_table,
-                     avg_load_ratio_across_schemes, avg_load_ratio_for_batch)
+from .common import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MIN_SN, RANDOM_SN,
+                     BudgetSweepResult, OocoreSweepResult, SharedSweepResult, SweepResult,
+                     WawSweepResult, fmt_table, avg_load_ratio_across_schemes,
+                     avg_load_ratio_for_batch)
 
 
 def table3(sweep: SweepResult, out_dir: str) -> str:

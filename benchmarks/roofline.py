@@ -10,7 +10,7 @@ import csv
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from .common import fmt_table
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
@@ -34,8 +33,18 @@ def main() -> None:
                          "with a host cache below the graph's shard bytes;"
                          " the CI disk-tier smoke, gated on oracle match "
                          "and real disk/read-ahead traffic)")
+    ap.add_argument("--track", action="store_true",
+                    help="emit a BENCH_<utc-date>.json trajectory point "
+                         "(smoke-size sweeps + kernel timing) and gate "
+                         "against the last committed one — see track.py")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.track:
+        from . import track
+        track.main(["--seed", str(args.seed),
+                    "--dryrun-dir", args.dryrun_dir])
+        return
 
     from . import mp_scaling, paper_tables, roofline
     from .common import (build_workloads, run_budget_sweep, run_oocore_sweep,

@@ -9,7 +9,7 @@ repo goes through this module so a jax upgrade is a one-file audit.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 __all__ = ["shard_map", "make_mesh", "make_part_mesh", "axis_size"]
 

@@ -10,14 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import (BLOCK_ATTN, FAMILY_AUDIO, FAMILY_VLM,
-                             ModelConfig)
+from ..models.config import FAMILY_AUDIO, FAMILY_VLM, ModelConfig
 
 _ARCH_IDS = [
     "qwen1_5_110b",

@@ -24,15 +24,13 @@ routes through it (interpret mode on CPU).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import (DIR_BACKWARD, DIR_FORWARD, DIR_UNDIRECTED, PartitionArrays,
-                    PartitionedGraph, WILDCARD)
+from .graph import DIR_BACKWARD, DIR_FORWARD, DIR_UNDIRECTED, PartitionArrays, WILDCARD
 from .plan import PlanArrays
 from .query import QDIR_ANY, QDIR_IN, QDIR_OUT
 from .state import apply_value_op
@@ -115,29 +113,57 @@ def _match_tile_jnp(rows_b, step_b, lidx_b, m,
     return ok, dg, ns, nr
 
 
-def _match_tile(rows_b, step_b, lidx_b, m, part, plan, n_steps, use_pallas):
+def _next_rows(rows_b, step_b, dg, ok_shape, plan):
+    """New binding rows + steps (scatter-shaped; stays in jnp either way)."""
+    Q = rows_b.shape[1]
+    s = jnp.clip(step_b, 0, plan.src_slot.shape[0] - 1)
+    p_dst = plan.dst_slot[s]
+    p_closes = plan.closes_cycle[s]
+    col = jnp.arange(Q, dtype=jnp.int32)
+    setcol = (col[None, None, :] == p_dst[:, None, None]) & (p_closes[:, None, None] == 0)
+    nr = jnp.where(setcol, dg[:, :, None], rows_b[:, None, :])
+    ns = jnp.broadcast_to(step_b[:, None] + 1, ok_shape)
+    return nr, ns
+
+
+def _expand_classify(rows_b, step_b, lidx_b, m, part, g2l_row, owner, aux,
+                     plan, n_steps, use_pallas):
+    """Fused inner step: match an [EB, W] candidate tile AND classify every
+    produced row as done / keep / outgoing (with destination pid).
+
+    ``aux`` is the (ell_dlidx, ell_downer) pair from kops.denorm_locality
+    when use_pallas (hoisted out of the while loop), else None.
+    Returns ([EB, W]-shaped) ok, dg, ns, nr, done, keep, outm, dest.
+    """
+    n_core = part["n_core"]
     if use_pallas:
         from ..kernels import ops as kops
-        ok, dg = kops.frontier_expand(
+        ell_dlidx, ell_downer = aux
+        ok, dg, done, keep, outm, dest = kops.fused_frontier(
             rows_b, step_b, lidx_b, m,
             part["ell_dst"], part["ell_label"], part["ell_dir"],
             part["ell_dlab"], part["ell_dval"], part["ell_dgid"],
+            ell_dlidx, ell_downer, g2l_row, owner, n_core,
             plan, n_steps)
-        # row construction stays in jnp (cheap, scatter-shaped)
-        EB, W = ok.shape
-        Q = rows_b.shape[1]
-        s = jnp.clip(step_b, 0, plan.src_slot.shape[0] - 1)
-        p_dst = plan.dst_slot[s]
-        p_closes = plan.closes_cycle[s]
-        col = jnp.arange(Q, dtype=jnp.int32)
-        setcol = (col[None, None, :] == p_dst[:, None, None]) & (p_closes[:, None, None] == 0)
-        nr = jnp.where(setcol, dg[:, :, None], rows_b[:, None, :])
-        ns = jnp.broadcast_to(step_b[:, None] + 1, ok.shape)
-        return ok, dg, ns, nr
-    return _match_tile_jnp(rows_b, step_b, lidx_b, m,
-                           part["ell_dst"], part["ell_label"], part["ell_dir"],
-                           part["node_label"], part["node_value"], part["node_gid"],
-                           plan, n_steps)
+        nr, ns = _next_rows(rows_b, step_b, dg, ok.shape, plan)
+        return ok, dg, ns, nr, done, keep, outm, dest
+
+    ok, dg, ns, nr = _match_tile_jnp(
+        rows_b, step_b, lidx_b, m,
+        part["ell_dst"], part["ell_label"], part["ell_dir"],
+        part["node_label"], part["node_value"], part["node_gid"],
+        plan, n_steps)
+    done = ok & (ns >= n_steps)
+    s2 = jnp.clip(ns, 0, plan.src_slot.shape[0] - 1)
+    nsrc = plan.src_slot[s2]                                   # [EB, W]
+    fg = jnp.take_along_axis(nr, nsrc[:, :, None], axis=2)[:, :, 0]
+    fg_safe = jnp.clip(fg, 0, g2l_row.shape[0] - 1)
+    l2 = jnp.take(g2l_row, fg_safe)
+    local = (l2 >= 0) & (l2 < n_core) & (fg >= 0)
+    keep = ok & ~done & local
+    outm = ok & ~done & ~local
+    dest = jnp.take(owner, fg_safe)
+    return ok, dg, ns, nr, done, keep, outm, dest
 
 
 def make_partition_evaluator(node_pad: int, ell_width: int, cfg: EngineConfig):
@@ -178,6 +204,15 @@ def make_partition_evaluator(node_pad: int, ell_width: int, cfg: EngineConfig):
                  seed_fresh: jax.Array) -> EvalResult:
         n_core = part["n_core"]
         pid = part["pid"]
+
+        if cfg.use_pallas:
+            # locality tables for the fused kernel: computed once per call,
+            # hoisted out of the while loop (static python branch — cfg is
+            # a closure constant, so the jnp path pays nothing)
+            from ..kernels import ops as kops
+            aux = kops.denorm_locality(part["ell_dgid"], g2l_row, owner)
+        else:
+            aux = None
 
         # ---- seed fresh start-node bindings (SNI entries with NULL vid) ----
         node_idx = jnp.arange(Np, dtype=jnp.int32)
@@ -238,24 +273,18 @@ def make_partition_evaluator(node_pad: int, ell_width: int, cfg: EngineConfig):
             # consume them
             wv = wv.at[sel].set(jnp.take(wv, sel) & ~m)
 
-            ok, dg, ns, nr = _match_tile(rows_b, step_b, lidx_b, m, part, plan,
-                                         n_steps, cfg.use_pallas)
+            (ok, dg, ns, nr, done_t, keep_t, outm_t, dest_t) = _expand_classify(
+                rows_b, step_b, lidx_b, m, part, g2l_row, owner, aux,
+                plan, n_steps, cfg.use_pallas)
 
             EBW = EB * W
             ok_f = ok.reshape(EBW)
             nr_f = nr.reshape(EBW, Q)
             ns_f = ns.reshape(EBW)
-
-            done = ok_f & (ns_f >= n_steps)
-            s2 = jnp.clip(ns_f, 0, S - 1)
-            nsrc = plan.src_slot[s2]
-            fg = jnp.take_along_axis(nr_f, nsrc[:, None], axis=1)[:, 0]
-            fg_safe = jnp.clip(fg, 0, g2l_row.shape[0] - 1)
-            l2 = jnp.take(g2l_row, fg_safe)
-            local = (l2 >= 0) & (l2 < n_core) & (fg >= 0)
-            keep = ok_f & ~done & local
-            outm = ok_f & ~done & ~local
-            dest = jnp.take(owner, fg_safe)
+            done = done_t.reshape(EBW)
+            keep = keep_t.reshape(EBW)
+            outm = outm_t.reshape(EBW)
+            dest = dest_t.reshape(EBW)
 
             cr, _, cn, ovf = _append(cr, (), cn, nr_f, (), done, ovf)
             orr, (os_, od), on, ovf = _append(orr, (os_, od), on, nr_f,

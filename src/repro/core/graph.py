@@ -20,7 +20,7 @@ the classic vector-machine sparse format — and is what the Pallas
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

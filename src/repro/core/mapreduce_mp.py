@@ -19,8 +19,11 @@ The whole query runs as ONE compiled program: iterations are a
 round-trip between iterations, which is the beyond-paper response-time win
 (the paper's Hadoop incarnation pays a full job launch per iteration).
 The same condition also carries the answer budget ("all or specified
-number of answers", Sec. 1): a psum of per-mapper FAA counts reaching
-``max_answers`` exits the compiled program early on-device.
+number of answers", Sec. 1): a psum of per-mapper UNIQUE-answer counts
+(dedup is done device-side; duplicates of an answer always converge on the
+mapper owning its last frontier vertex, so per-mapper distinct counts add
+up exactly) reaching ``max_answers`` exits the compiled program early
+on-device — ``max_answers=K`` returns exactly K unique answers in one run.
 
 Backpressure: rows whose destination quota is full simply stay in the local
 buffer and are re-offered next iteration — deadlock-free because delivered
@@ -29,13 +32,14 @@ anywhere.  Overflow of the *merge* buffer sets a flag the host checks.
 
 When fewer mapper nodes than partitions are available (the paper's
 m < required(i) case), ``m_limit`` gates expansion to the top-m partitions
-per iteration, ranked on-device by the SN heuristics.
+per iteration, ranked on-device by the SN heuristics — including MAX-YIELD,
+whose per-partition completed/spawned counters are carried through the
+while_loop state and all_gather'd at ranking time.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +47,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .engine import EngineConfig, _match_tile
+from .engine import EngineConfig, _expand_classify
 from .graph import PartitionedGraph, WILDCARD
 from .heuristics import MAX_SN, MAX_YIELD, MIN_SN, RANDOM_SN
 from .metrics import RunStats, l_ideal_for_plan
@@ -61,13 +65,18 @@ class MapReduceMPResult:
     answers: np.ndarray
     stats: RunStats
     n_iterations: int
+    # per-partition yield counters carried through the while_loop state —
+    # the same completed/spawned observations the host-loop engines feed
+    # into QueryState.observe_yield, surfaced for the session profile
+    completed_from: np.ndarray = None   # [P] int64
+    spawned_from: np.ndarray = None     # [P] int64
 
 
 def _heuristic_id(h: str) -> int:
-    # MAX-YIELD needs host-observed completion rates which the single
-    # compiled program never surfaces; on-device it degrades to MAX-SN
-    # (its no-information behaviour — see heuristics.py).
-    return {MAX_SN: 0, MIN_SN: 1, RANDOM_SN: 2, MAX_YIELD: 0}[h]
+    # MAX-YIELD (id 3) ranks on SNI x completion rate; the completed/
+    # spawned counters it needs are carried through the while_loop state
+    # and all_gather'd at ranking time, so it runs fully on-device.
+    return {MAX_SN: 0, MIN_SN: 1, RANDOM_SN: 2, MAX_YIELD: 3}[h]
 
 
 class MapReduceMPEngine:
@@ -91,12 +100,6 @@ class MapReduceMPEngine:
         assert len(mesh.axis_names) == 1, "use a 1-D 'part' mesh"
         self.quota = quota_per_dest or max(8, self.cfg.cap // (4 * self.P))
         self.m_limit = m_limit if m_limit is not None else self.P
-        if heuristic == MAX_YIELD:
-            import warnings
-            warnings.warn(
-                "MapReduceMP has no host loop to observe completion rates; "
-                "MAX-YIELD degrades to MAX-SN on-device — reported numbers "
-                "are MAX-SN numbers", stacklevel=2)
         self.heuristic = heuristic
         self.max_outer_iters = max_outer_iters
         self._compiled = None
@@ -124,6 +127,26 @@ class MapReduceMPEngine:
         hid = _heuristic_id(self.heuristic)
         m_limit = self.m_limit
 
+        def unique_rows(faa, faa_n):
+            """#distinct rows among the first faa_n FAA entries, on-device.
+
+            Lexicographic sort via Q iterated stable argsorts (invalid rows
+            sentinel-filled with INT32_MAX so they sort last), then count
+            rows that differ from their predecessor.  Exact — no hashing.
+            """
+            N = faa.shape[0]
+            valid = jnp.arange(N, dtype=jnp.int32) < faa_n
+            rows = jnp.where(valid[:, None], faa, jnp.int32(2**31 - 1))
+            order = jnp.arange(N, dtype=jnp.int32)
+            for q in range(Q - 1, -1, -1):
+                keys = jnp.take(rows[:, q], order)
+                order = jnp.take(order, jnp.argsort(keys, stable=True))
+            srt = jnp.take(rows, order, axis=0)
+            vsrt = jnp.take(valid, order)
+            first = jnp.concatenate(
+                [jnp.ones(1, bool), jnp.any(srt[1:] != srt[:-1], axis=1)])
+            return (vsrt & first).sum(dtype=jnp.int32)
+
         def frontier_info(rows, step, valid, plan, n_steps, g2l_row, n_core):
             s = jnp.clip(step, 0, S - 1)
             src_slot = plan.src_slot[s]
@@ -143,6 +166,14 @@ class MapReduceMPEngine:
             node_gid = part["node_gid"][0]
             pdict = {k: v[0] for k, v in part.items()}
             g2l_row = g2l_row[0]
+
+            if cfg.use_pallas:
+                # locality tables for the fused kernel — once per query,
+                # outside the while loop (cfg is a closure constant)
+                from ..kernels import ops as kops
+                aux = kops.denorm_locality(pdict["ell_dgid"], g2l_row, owner)
+            else:
+                aux = None
 
             # ---- iteration-0 seeding on every partition (all mappers) ----
             node_idx = jnp.arange(Np, dtype=jnp.int32)
@@ -172,20 +203,31 @@ class MapReduceMPEngine:
             valid = valid & ~done0
 
             overflow = jnp.bool_(False)
+            # unique-FAA count for the budget stop (seeds are distinct
+            # vertices so seed answers are duplicate-free, but keep the
+            # same gated computation for uniformity)
+            uniq_n = jax.lax.cond(budget < _NO_BUDGET,
+                                  lambda: unique_rows(faa, faa_n),
+                                  lambda: faa_n)
+            # per-partition yield counters (MAX-YIELD observations)
+            comp_cnt = faa_n
+            spawn_cnt = jnp.int32(0)
 
             def cond(st):
-                rows, step, valid, faa, faa_n, ovf, it = st
+                rows, step, valid, faa, faa_n, uniq, _c, _s, ovf, it = st
                 live = (valid & (step < n_steps)).sum(dtype=jnp.int32)
                 total = jax.lax.psum(live, axis)
-                # answer-budget stop: the jobtracker's global answer count
-                # (psum of per-mapper FAA sizes) reaching K ends the single
-                # compiled program early — no host round-trip (Sec. 9 +
-                # runner.py budget semantics)
-                got = jax.lax.psum(faa_n, axis)
+                # answer-budget stop: the jobtracker's global UNIQUE answer
+                # count (psum of per-mapper distinct-FAA sizes; duplicates
+                # of an answer always land on one mapper, so per-device
+                # unique counts add up exactly) reaching K ends the single
+                # compiled program early — no host round-trip and no
+                # host-side re-run (Sec. 9 + runner.py budget semantics)
+                got = jax.lax.psum(uniq, axis)
                 return (total > 0) & (got < budget) & (it < self.max_outer_iters)
 
             def body(st):
-                rows, step, valid, faa, faa_n, ovf, it = st
+                rows, step, valid, faa, faa_n, uniq, comp, spawn, ovf, it = st
                 act, pend, lidx, fg = frontier_info(rows, step, valid, plan,
                                                     n_steps, g2l_row, n_core)
 
@@ -197,6 +239,16 @@ class MapReduceMPEngine:
                         key = -all_sni
                     elif hid == 1:      # MIN-SN among non-empty
                         key = jnp.where(all_sni > 0, all_sni, jnp.int32(2**30))
+                    elif hid == 3:      # MAX-YIELD: SNI x completion rate
+                        # the on-device mirror of heuristics.rank_partitions:
+                        # Laplace-smoothed completed/(completed+spawned)
+                        # from the counters carried in the loop state
+                        all_comp = jax.lax.all_gather(comp, axis)    # [P]
+                        all_spawn = jax.lax.all_gather(spawn, axis)  # [P]
+                        rate = ((all_comp.astype(jnp.float32) + 1.0)
+                                / ((all_comp + all_spawn).astype(jnp.float32)
+                                   + 2.0))
+                        key = -(all_sni.astype(jnp.float32) * rate)
                     else:               # RANDOM among non-empty
                         r = jax.random.permutation(
                             jax.random.fold_in(jax.random.PRNGKey(rngseed), it), PP)
@@ -216,22 +268,36 @@ class MapReduceMPEngine:
                 lidx_b = jnp.take(lidx, sel)
                 valid = valid.at[sel].set(jnp.take(valid, sel) & ~m)
 
-                ok, dg, ns, nr = _match_tile(rows_b, step_b, lidx_b, m, pdict,
-                                             plan, n_steps, cfg.use_pallas)
+                (ok, dg, ns, nr, done_t, keep_t, outm_t, _dest) = \
+                    _expand_classify(rows_b, step_b, lidx_b, m, pdict,
+                                     g2l_row, owner, aux, plan, n_steps,
+                                     cfg.use_pallas)
                 EBW = EB * W
                 ok_f = ok.reshape(EBW)
                 nr_f = nr.reshape(EBW, Q)
                 ns_f = ns.reshape(EBW)
+                done = done_t.reshape(EBW)
 
-                done = ok_f & (ns_f >= n_steps)
                 cnt = jnp.cumsum(done.astype(jnp.int32)) - 1
                 tgt = jnp.where(done, faa_n + cnt, FAA_CAP)
                 faa = faa.at[tgt].set(nr_f, mode="drop")
                 new_faa_n = faa_n + done.sum(dtype=jnp.int32)
                 ovf = ovf | (new_faa_n > FAA_CAP)
                 faa_n = jnp.minimum(new_faa_n, FAA_CAP)
+                uniq = jax.lax.cond(budget < _NO_BUDGET,
+                                    lambda f, n: unique_rows(f, n),
+                                    lambda f, n: n, faa, faa_n)
 
-                keep = ok_f & ~done
+                # yield observations: completions here vs continuations
+                # spawned into another partition's buffers (the kernel's
+                # `out` class — next frontier owned elsewhere)
+                comp = comp + done.sum(dtype=jnp.int32)
+                spawn = spawn + outm_t.reshape(EBW).sum(dtype=jnp.int32)
+
+                # ALL continuing rows stay local until the shuffle below —
+                # the mapper holds non-local rows back-pressured in its own
+                # buffer (kernel classes keep | out)
+                keep = (keep_t | outm_t).reshape(EBW)
                 free = jnp.argsort(valid, stable=True)
                 ovf = ovf | (keep.sum(dtype=jnp.int32)
                              > (~valid).sum(dtype=jnp.int32))
@@ -291,16 +357,18 @@ class MapReduceMPEngine:
                 step = step.at[tgt3].set(recv_step, mode="drop")
                 valid = valid.at[tgt3].set(True, mode="drop")
 
-                return rows, step, valid, faa, faa_n, ovf, it + 1
+                return (rows, step, valid, faa, faa_n, uniq, comp, spawn,
+                        ovf, it + 1)
 
-            st = (rows, step, valid, faa, faa_n, overflow, jnp.int32(0))
-            rows, step, valid, faa, faa_n, overflow, iters = \
-                jax.lax.while_loop(cond, body, st)
+            st = (rows, step, valid, faa, faa_n, uniq_n, comp_cnt, spawn_cnt,
+                  overflow, jnp.int32(0))
+            (rows, step, valid, faa, faa_n, uniq_n, comp_cnt, spawn_cnt,
+             overflow, iters) = jax.lax.while_loop(cond, body, st)
             # did the loop end because the work drained (vs budget/iter cap)?
             live_end = (valid & (step < n_steps)).sum(dtype=jnp.int32)
             exhausted = jax.lax.psum(live_end, axis) == 0
             return (faa[None], faa_n[None], overflow[None], iters[None],
-                    exhausted[None])
+                    exhausted[None], comp_cnt[None], spawn_cnt[None])
 
         pspec = P(axis)
         in_specs = (
@@ -312,7 +380,7 @@ class MapReduceMPEngine:
             P(),                                # rng seed
             P(),                                # answer budget (replicated)
         )
-        out_specs = (pspec, pspec, pspec, pspec, pspec)
+        out_specs = (pspec, pspec, pspec, pspec, pspec, pspec, pspec)
         fn = shard_map(device_fn, mesh=self.mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
         return jax.jit(fn)
@@ -324,39 +392,27 @@ class MapReduceMPEngine:
         if self._compiled is None:
             self._compiled = self._build(cfg.s_pad)
         plan_arrays = PlanArrays.from_plan(plan, pad_steps=cfg.s_pad)
-        # The device-side stop counts raw FAA appends, which may include
-        # duplicate rows (two distinct expansion paths converging on the
-        # same binding).  If dedup leaves us short of K while the program
-        # stopped on the budget (not on exhaustion), re-run with a doubled
-        # device budget — geometric, so at most ~log2(dupes) extra runs,
-        # and none at all on duplicate-free workloads.
+        # The device-side budget stop counts UNIQUE answers (per-mapper
+        # distinct-FAA sizes; duplicates of an answer always converge on
+        # one mapper), so a single compiled run suffices — no geometric
+        # host re-run on duplicate-heavy workloads.
         dev_budget = (int(_NO_BUDGET) if max_answers is None
                       else int(max_answers))
         load0 = self.store.stats.copy()
         entry = self.store.get_stacked(tuple(range(self.P)),
                                        sharding=self._part_sharding)
-        while True:
-            faa, faa_n, overflow, iters, exhausted = self._compiled(
-                entry.part, entry.g2l, self.store.owner, plan_arrays,
-                np.int32(plan.n_steps), np.int32(seed),
-                np.int32(min(dev_budget, int(_NO_BUDGET))))
-            faa = np.asarray(faa)
-            faa_n = np.asarray(faa_n)
-            if bool(np.asarray(overflow).any()):
-                raise RuntimeError(
-                    "MapReduceMP buffer overflow; raise cap/quota")
-            rows = [faa[p, : faa_n[p]] for p in range(self.P) if faa_n[p]]
-            answers = (np.unique(np.concatenate(rows), axis=0) if rows
-                       else np.zeros((0, cfg.q_pad), dtype=np.int32))
-            if (max_answers is None
-                    or answers.shape[0] >= max_answers
-                    or bool(np.asarray(exhausted).all())  # total < K: no more
-                    # iteration-cap stop: re-running the same deterministic
-                    # program can only reproduce the same short answer set
-                    or int(np.asarray(iters).max()) >= self.max_outer_iters
-                    or dev_budget >= int(_NO_BUDGET)):
-                break
-            dev_budget *= 2
+        faa, faa_n, overflow, iters, exhausted, comp, spawn = self._compiled(
+            entry.part, entry.g2l, self.store.owner, plan_arrays,
+            np.int32(plan.n_steps), np.int32(seed),
+            np.int32(min(dev_budget, int(_NO_BUDGET))))
+        faa = np.asarray(faa)
+        faa_n = np.asarray(faa_n)
+        if bool(np.asarray(overflow).any()):
+            raise RuntimeError(
+                "MapReduceMP buffer overflow; raise cap/quota")
+        rows = [faa[p, : faa_n[p]] for p in range(self.P) if faa_n[p]]
+        answers = (np.unique(np.concatenate(rows), axis=0) if rows
+                   else np.zeros((0, cfg.q_pad), dtype=np.int32))
         answers = truncate_answers(answers, max_answers)
         n_iter = int(np.asarray(iters).max())
         delta = self.store.stats - load0
@@ -371,8 +427,10 @@ class MapReduceMPEngine:
                          prefetch_hits=delta.prefetch_hits,
                          disk_reads=delta.disk_reads,
                          read_ahead_hits=delta.read_ahead_hits)
-        return MapReduceMPResult(answers=answers, stats=stats,
-                                 n_iterations=n_iter)
+        return MapReduceMPResult(
+            answers=answers, stats=stats, n_iterations=n_iter,
+            completed_from=np.asarray(comp).astype(np.int64).reshape(-1),
+            spawned_from=np.asarray(spawn).astype(np.int64).reshape(-1))
 
     def run_request(self, req: RunRequest) -> RunReport:
         """The shared ``QueryRunner`` protocol (see core/runner.py).
@@ -389,4 +447,6 @@ class MapReduceMPEngine:
         res = self.run(req.plan, seed=req.seed, max_answers=req.max_answers)
         return RunReport(answers=res.answers, stats=res.stats,
                          engine="mapreduce",
-                         extra={"n_iterations": res.n_iterations})
+                         extra={"n_iterations": res.n_iterations,
+                                "completed_from": res.completed_from,
+                                "spawned_from": res.spawned_from})

@@ -24,7 +24,7 @@ split.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import numpy as np
@@ -174,13 +174,17 @@ class OPATEngine:
             seed_fresh = bool(st.fresh_pending[pid])
             st.fresh_pending[pid] = False
             entry = self.store.get(pid)
-            # stage the heuristic's runner-up while pid evaluates: the
-            # device_put dispatch below returns immediately, so the
-            # transfer overlaps the evaluator work (ROADMAP item #1)
-            if self.prefetch and len(ranked) > 1:
-                self.store.prefetch(ranked[1])
-            self._run_partition(entry, plan_arrays, plan.n_steps, batch,
-                                seed_fresh, st)
+            # double-buffered streaming: pin pid, then stage the
+            # heuristic's runner-up while pid evaluates — device_put
+            # dispatch returns immediately, so the H2D copy overlaps the
+            # evaluator work (ROADMAP item #1); the pin guarantees the
+            # in-flight staging can evict anything BUT the partition the
+            # running kernel reads (store may exceed capacity by one slot)
+            with self.store.pinned(pid):
+                if self.prefetch and len(ranked) > 1:
+                    self.store.prefetch(ranked[1])
+                self._run_partition(entry, plan_arrays, plan.n_steps, batch,
+                                    seed_fresh, st)
 
         answers = truncate_answers(st.unique_answers(), max_answers)
         delta = self.store.stats - load0

@@ -17,8 +17,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .catalog import Catalog
-from .graph import Graph, WILDCARD
-from .query import (OP_BY_NAME, OP_NONE, QDIR_ANY, QDIR_IN, QDIR_OUT, Query)
+from .graph import Graph
+from .query import OP_BY_NAME, QDIR_ANY, QDIR_IN, QDIR_OUT, Query
 
 
 @dataclasses.dataclass

@@ -13,9 +13,8 @@ QP-Subdue handles top-level ORs (one plan per disjunct).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-import numpy as np
 
 from .graph import Graph, WILDCARD
 

@@ -299,11 +299,15 @@ class QueryScheduler:
             # a query retiring this round is never charged prefetch
             # traffic for a partition it takes no part in
             event = self.store.stats - ev0
-            # stage the WORKLOAD's runner-up while pid evaluates — the
-            # shared generalization of OPAT's per-query prefetch
-            if self.prefetch and len(ranked) > 1:
-                self.store.prefetch(int(ranked[1]))
-            self._eval_batch(beval, entry, pid, batch)
+            # double-buffered streaming: pin pid, then stage the
+            # WORKLOAD's runner-up while pid evaluates — the shared
+            # generalization of OPAT's per-query prefetch; the pin keeps
+            # the overlapped H2D copy from evicting the entry the batched
+            # evaluator is reading
+            with self.store.pinned(pid):
+                if self.prefetch and len(ranked) > 1:
+                    self.store.prefetch(int(ranked[1]))
+                self._eval_batch(beval, entry, pid, batch)
             self.loads.append(pid)
             self.batch_sizes.append(len(batch))
             # round-scoped attribution: the event lands once in each

@@ -193,9 +193,11 @@ class GraphSession:
                 store=self.store)
 
         # per-partition workload profile, accumulated across submits.
-        # MapReduceMP runs as one compiled program with no host loop, so it
-        # surfaces no per-partition load/yield counters — the profile flags
-        # that rather than passing off all-zeros as observations.
+        # MapReduceMP runs as one compiled program with no host loop: it
+        # now surfaces per-partition YIELD counters (carried through the
+        # while_loop state), but still no per-partition LOAD sequence —
+        # the profile flags that rather than passing off all-zeros as
+        # load observations.
         self.observes_partition_counters = engine != "mapreduce"
         self._loads = np.zeros(self.k, dtype=np.int64)
         self._completed = np.zeros(self.k, dtype=np.int64)
@@ -310,6 +312,11 @@ class GraphSession:
             if st is not None:     # OPAT / TraditionalMP expose QueryState
                 self._completed += st.completed_from
                 self._spawned += st.spawned_from
+            elif rep.extra.get("completed_from") is not None:
+                # MapReduceMP: yield counters carried through the device
+                # while_loop and surfaced as plain [k] arrays
+                self._completed += rep.extra["completed_from"]
+                self._spawned += rep.extra["spawned_from"]
         pairs, span = answer_span_matrix(self.pg.owner, answers, self.k)
         self._cospan += pairs
         spanning = answers[span >= 2]
@@ -336,11 +343,12 @@ class GraphSession:
         (WawPart, arXiv:2203.14888), and what ``launch/serve.py --json``
         embeds for CI.
 
-        ``partition_counters_observed`` is False for MapReduceMP (no host
-        loop, so per-partition load/yield counters are structurally zero
-        and the repartitioner skips its split-pressure term); the
-        ``answer_spans`` block is observed host-side from the answers and
-        is valid for every engine.
+        ``partition_counters_observed`` is False for MapReduceMP: yield
+        counters (completed/spawned) ARE carried through the device
+        while_loop and absorbed, but there is no host loop and hence no
+        per-partition LOAD sequence, so the repartitioner skips its
+        load-share split-pressure term; the ``answer_spans`` block is
+        observed host-side from the answers and is valid for every engine.
         """
         partitions = []
         for p in range(self.k):

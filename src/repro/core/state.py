@@ -18,7 +18,7 @@ TraditionalMP orchestrators; MapReduceMP keeps them device-resident.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

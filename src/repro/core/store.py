@@ -60,6 +60,7 @@ bit-for-bit.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
@@ -194,6 +195,9 @@ class PartitionStore:
             self._host_tier = HostArrayTier(pg)
         self._cache: "OrderedDict[Any, StoreEntry]" = OrderedDict()
         self._owner_dev: Optional[jax.Array] = None
+        # pinned base keys (refcounted): protected from LRU eviction while
+        # a caller evaluates against them — the double-buffer guarantee
+        self._pins: Dict[Any, int] = {}
 
     # -- global (non-partition) arrays ------------------------------------
 
@@ -264,6 +268,47 @@ class PartitionStore:
         self.stats.bytes_prefetched += entry.nbytes
         self._insert(entry)
         return True
+
+    # -- pinning (double-buffered streaming) --------------------------------
+
+    def pin(self, key: StoreKey) -> None:
+        """Protect ``key`` from LRU eviction until the matching unpin().
+
+        This is what makes double-buffered partition streaming safe: while
+        partition i is being evaluated, prefetching the heuristic's
+        runner-up i+1 (its H2D copy overlapping i's kernel execution) may
+        push the cache over capacity — pinning i guarantees the in-flight
+        staging evicts something ELSE, never the buffers the running
+        kernel reads.  The cache may transiently exceed its budget by the
+        pinned entries (the price of the second buffer).  Pins refcount;
+        explicit drop()/release()/clear() still remove pinned entries
+        (pins only guard the implicit LRU path).
+        """
+        nk = self._normkey(key)
+        self._pins[nk] = self._pins.get(nk, 0) + 1
+
+    def unpin(self, key: StoreKey) -> None:
+        nk = self._normkey(key)
+        n = self._pins.get(nk, 0) - 1
+        if n <= 0:
+            self._pins.pop(nk, None)
+            # the pin may have let the cache run over budget (that is the
+            # point of the second buffer); restore the capacity invariant
+            # now that the entry is evictable again
+            self._evict_to_capacity(keep=None)
+        else:
+            self._pins[nk] = n
+
+    @contextlib.contextmanager
+    def pinned(self, *keys: StoreKey):
+        """``with store.pinned(pid): ...`` — pin for the block's duration."""
+        for k in keys:
+            self.pin(k)
+        try:
+            yield self
+        finally:
+            for k in keys:
+                self.unpin(k)
 
     def drop(self, key: StoreKey) -> bool:
         """Explicitly release every staging of ``key`` — including
@@ -357,10 +402,17 @@ class PartitionStore:
         self._cache.move_to_end(ck)
         self._evict_to_capacity(keep=ck)
 
+    def _is_pinned(self, ck: Any) -> bool:
+        e = self._cache.get(ck)
+        return e is not None and self._normkey(e.key) in self._pins
+
     def _evict_to_capacity(self, keep: Any) -> None:
         """Drop least-recently-used entries until within capacity.  The
         just-inserted entry is never evicted, even if it alone exceeds the
-        budget — the caller needs it regardless."""
+        budget — the caller needs it regardless.  Pinned entries are
+        likewise skipped (double-buffered streaming: the entry under
+        evaluation must survive the overlapped staging of the next one),
+        so the cache can transiently exceed capacity by the pinned set."""
         def over() -> bool:
             if self.capacity_parts is not None:
                 if sum(e.cost_parts for e in self._cache.values()) > self.capacity_parts:
@@ -371,7 +423,8 @@ class PartitionStore:
             return False
 
         while over():
-            victim = next((k for k in self._cache if k != keep), None)
+            victim = next((k for k in self._cache
+                           if k != keep and not self._is_pinned(k)), None)
             if victim is None:
                 break
             del self._cache[victim]
@@ -382,7 +435,8 @@ class PartitionStore:
                 return [k for k, e in self._cache.items()
                         if isinstance(e.key, tuple)]
             while len(stacked()) > self.max_stacked_entries:
-                victim = next((k for k in stacked() if k != keep), None)
+                victim = next((k for k in stacked()
+                               if k != keep and not self._is_pinned(k)), None)
                 if victim is None:
                     break
                 del self._cache[victim]

@@ -16,7 +16,7 @@ Both scale down to CPU test sizes; the paper-scale configs live in
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 

@@ -13,10 +13,8 @@ tolerance).  At cluster scale each host draws its own slice by folding
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

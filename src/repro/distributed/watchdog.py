@@ -14,7 +14,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, List, Optional
+from typing import Deque, Optional
 
 
 @dataclasses.dataclass

@@ -8,7 +8,6 @@ working set in VMEM and avoids cross-step accumulation hazards).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ tests sweep shapes/dtypes and assert allclose/array_equal against these.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from ..core.graph import DIR_BACKWARD, DIR_FORWARD, DIR_UNDIRECTED, WILDCARD
@@ -68,6 +67,52 @@ def frontier_expand_ref(rows_b, step_b, lidx_b, m,
     ok = (m[:, None] & (step_b[:, None] < n_steps)
           & edge_exists & elabel_ok & dir_ok & (cyc_ok | new_ok))
     return ok, dg
+
+
+def fused_frontier_ref(rows_b, step_b, lidx_b, m,
+                       ell_dst, ell_label, ell_dir,
+                       ell_dlab, ell_dval, ell_dgid,
+                       g2l_row, owner, n_core,
+                       p_el, p_dir, p_dlab, p_dop, p_dval, p_dst, p_closes,
+                       nsrc, n_steps):
+    """Fused expansion + answer-emission classification (oracle for
+    fused_frontier.py).  Extends frontier_expand_ref with the routing
+    decision the engine loop makes for every produced row.
+
+    Extra args over frontier_expand_ref:
+      g2l_row [V]  int32 — global->local index for THIS partition (-1 absent)
+      owner   [V]  int32 — owning partition id per global vertex
+      n_core  scalar     — #core nodes of this partition
+      nsrc    [EB] int32 — src slot of the NEXT plan step (pre-gathered)
+
+    Returns six [EB, W] arrays: ok/done/keep/out bool, dg/dest int32, as
+      ok   — candidate matched this step's predicates
+      done — matched and the plan is complete (append to FAA)
+      keep — matched, continues, next frontier is core-local (work buffer)
+      out  — matched, continues, next frontier owned elsewhere
+      dest — owner pid of the next frontier vertex (meaningful where out)
+    """
+    ok, dg = frontier_expand_ref(
+        rows_b, step_b, lidx_b, m,
+        ell_dst, ell_label, ell_dir, ell_dlab, ell_dval, ell_dgid,
+        p_el, p_dir, p_dlab, p_dop, p_dval, p_dst, p_closes, n_steps)
+
+    Q = rows_b.shape[1]
+    col = jnp.arange(Q, dtype=jnp.int32)
+    setcol = ((col[None, None, :] == p_dst[:, None, None])
+              & (p_closes[:, None, None] == 0))
+    nr = jnp.where(setcol, dg[:, :, None], rows_b[:, None, :])  # [EB, W, Q]
+    ns = jnp.broadcast_to(step_b[:, None] + 1, ok.shape)
+
+    done = ok & (ns >= n_steps)
+    fg = jnp.take_along_axis(nr, nsrc[:, None, None], axis=2)[:, :, 0]
+    fg_safe = jnp.clip(fg, 0, g2l_row.shape[0] - 1)
+    l2 = jnp.take(g2l_row, fg_safe)
+    local = (l2 >= 0) & (l2 < n_core) & (fg >= 0)
+    keep = ok & ~done & local
+    outm = ok & ~done & ~local
+    dest = jnp.take(owner, fg_safe)
+    return ok, dg, done, keep, outm, dest
 
 
 def label_histogram_ref(node_label, node_value, n_core_mask,

@@ -15,7 +15,6 @@ One JSON per cell is written to --out; existing files are skipped (the
 driver is resumable, so a killed run restarts where it left off).
 """
 import argparse
-import functools
 import json
 import time
 import traceback
@@ -28,7 +27,7 @@ import numpy as np
 from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
                            shape_applicable)
 from repro.launch import hlo_analysis
-from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (ShardingRules, act_constraint,
                                    batch_shardings, cache_shardings,
                                    logit_constraint, opt_shardings,

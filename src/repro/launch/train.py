@@ -13,21 +13,14 @@ the same driver takes --production for make_production_mesh().
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.tokens import TokenPipeline, frontend_batch
 from repro.distributed import CheckpointManager, StepWatchdog
 from repro.launch.mesh import make_production_mesh, make_test_mesh
-from repro.launch.sharding import (act_constraint, batch_shardings,
-                                   logit_constraint, opt_shardings,
-                                   param_shardings)
+from repro.launch.sharding import act_constraint, logit_constraint, opt_shardings, param_shardings
 from repro.models.config import FAMILY_AUDIO
 from repro.models.transformer import init_params
 from repro.train.optimizer import OptConfig, init_opt_state

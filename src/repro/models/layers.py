@@ -15,13 +15,12 @@ matching 6·N_active·D roofline accounting.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import ModelConfig
 
 
 def rms_norm(x, scale, eps: float = 1e-6):

@@ -13,11 +13,10 @@ sequence length.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import rms_norm
 from .xlstm import _causal_conv1d

@@ -21,9 +21,7 @@ real.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +30,8 @@ import numpy as np
 from .config import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM,
                      BLOCK_RECURRENT, BLOCK_SLSTM, FAMILY_AUDIO, FAMILY_VLM,
                      ModelConfig)
-from .layers import (apply_rope, decode_attention, flash_attention,
-                     flash_attention_cv, local_attention, moe_ffn, rms_norm,
-                     swiglu)
+from .layers import (apply_rope, flash_attention, flash_attention_cv, local_attention, moe_ffn,
+                     rms_norm, swiglu)
 from . import rglru as rg
 from . import xlstm as xl
 

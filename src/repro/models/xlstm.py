@@ -12,7 +12,7 @@ factor, mLSTM uses projection factor 2.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

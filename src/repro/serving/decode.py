@@ -18,8 +18,7 @@ periods, keeping compile time depth-independent.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,13 +26,10 @@ import numpy as np
 
 from ..models import rglru as rg
 from ..models import xlstm as xl
-from ..models.config import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM,
-                             BLOCK_RECURRENT, BLOCK_SLSTM, FAMILY_AUDIO,
-                             FAMILY_VLM, ModelConfig)
-from ..models.layers import (apply_rope, flash_attention, local_attention,
-                             rms_norm, swiglu)
-from ..models.transformer import (Params, _apply_ffn, _dtype, _qkv,
-                                  apply_block, embed_inputs, stack_segments)
+from ..models.config import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM, BLOCK_RECURRENT,
+                             BLOCK_SLSTM, FAMILY_AUDIO, ModelConfig)
+from ..models.layers import apply_rope, flash_attention, local_attention, rms_norm
+from ..models.transformer import Params, _apply_ffn, _dtype, _qkv, embed_inputs, stack_segments
 
 Cache = Dict[str, Any]
 

@@ -48,7 +48,6 @@ memory through the store's host/device cache tiers.
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

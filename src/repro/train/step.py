@@ -9,13 +9,12 @@ model-axis reductions); MoE aux loss and z-loss are folded in.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..models.config import FAMILY_AUDIO, ModelConfig
+from ..models.config import ModelConfig
 from ..models.transformer import forward
 from .optimizer import OptConfig, adamw_update
 

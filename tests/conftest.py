@@ -7,11 +7,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
-from repro.core import (EngineConfig, OPATEngine, build_catalog,
-                        build_partitions, generate_plan, match_query,
+from repro.core import (EngineConfig, OPATEngine, build_catalog, build_partitions, generate_plan,
                         partition_graph)
 from repro.data.generators import subgen_like_graph
 

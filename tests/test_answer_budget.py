@@ -12,9 +12,8 @@ import numpy as np
 import pytest
 
 from repro.compat import make_part_mesh
-from repro.core import (BUDGET_HEURISTICS, EngineConfig, MAX_SN, MAX_YIELD,
-                        OPATEngine, RunRequest, TraditionalMPEngine,
-                        build_catalog, build_partitions, generate_plan,
+from repro.core import (EngineConfig, MAX_SN, MAX_YIELD, OPATEngine, RunRequest,
+                        TraditionalMPEngine, build_catalog, build_partitions, generate_plan,
                         match_query, partition_graph)
 from repro.core.mapreduce_mp import MapReduceMPEngine
 from repro.core.runner import QueryRunner, RunReport, truncate_answers

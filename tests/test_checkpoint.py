@@ -3,9 +3,7 @@ import json
 import os
 
 import numpy as np
-import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.data.tokens import TokenPipeline

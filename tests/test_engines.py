@@ -3,12 +3,10 @@
 import numpy as np
 import pytest
 
-import jax
 
-from repro.core import (ALL_HEURISTICS, EngineConfig, MAX_SN, MIN_SN,
-                        RANDOM_SN, OPATEngine, TraditionalMPEngine,
-                        build_catalog, build_partitions, generate_plan,
-                        match_query, partition_graph)
+from repro.core import (ALL_HEURISTICS, EngineConfig, MAX_SN, OPATEngine, TraditionalMPEngine,
+                        build_catalog, build_partitions, generate_plan, match_query,
+                        partition_graph)
 from repro.core.mapreduce_mp import MapReduceMPEngine
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries)

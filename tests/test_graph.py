@@ -3,9 +3,8 @@ import numpy as np
 import networkx as nx
 import pytest
 
-from repro.core import build_partitions, partition_graph, SCHEMES
-from repro.core.graph import GraphBuilder, WILDCARD
-from repro.data.generators import imdb_like_graph, subgen_like_graph
+from repro.core import build_partitions, partition_graph
+from repro.core.graph import GraphBuilder
 
 
 def nx_of(graph):

@@ -1,6 +1,5 @@
 """Static HLO cost analyzer: exact on known programs (the roofline's
 foundation — wrong here means wrong §Roofline)."""
-import numpy as np
 import pytest
 
 import jax
@@ -8,7 +7,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
-from repro.launch.hlo_cost import HloCostModel, analyze_hlo_text
+from repro.launch.hlo_cost import analyze_hlo_text
 
 
 def _compile(f, *specs):

@@ -12,9 +12,9 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import numpy as np, jax
-    from repro.core import (EngineConfig, MAX_SN, MIN_SN, build_catalog,
-                            build_partitions, generate_plan, match_query,
-                            partition_graph)
+    from repro.core import (EngineConfig, MAX_SN, MAX_YIELD, MIN_SN,
+                            build_catalog, build_partitions, generate_plan,
+                            match_query, partition_graph)
     from repro.core.mapreduce_mp import MapReduceMPEngine
     from repro.data.generators import subgen_like_graph, subgen_queries
 
@@ -25,7 +25,10 @@ SCRIPT = textwrap.dedent("""
     from repro.compat import make_part_mesh
     mesh = make_part_mesh(4)
 
-    for m_limit, heur in [(4, MAX_SN), (2, MAX_SN), (2, MIN_SN)]:
+    # (2, MAX_YIELD) gates expansion through the on-device completion-rate
+    # ranking (all_gathered completed/spawned counters, paper Sec. 9.2)
+    for m_limit, heur in [(4, MAX_SN), (2, MAX_SN), (2, MIN_SN),
+                          (2, MAX_YIELD)]:
         eng = MapReduceMPEngine(pg, mesh, EngineConfig(cap=16384),
                                 m_limit=m_limit, heuristic=heur)
         for dq in subgen_queries(g):
@@ -37,6 +40,8 @@ SCRIPT = textwrap.dedent("""
             assert got.shape == ref.shape and np.array_equal(got, ref), (
                 q.name, m_limit, heur, got.shape, ref.shape)
             assert res.n_iterations >= plan.max_path_len()
+            assert res.completed_from.shape == (4,)
+            assert int(res.completed_from.sum()) >= ref.shape[0]
 
     # answer budget across 4 devices: the global-psum stop condition must
     # return exactly min(K, total) rows from the full answer set

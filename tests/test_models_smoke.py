@@ -12,11 +12,11 @@ pytestmark = pytest.mark.slow
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPES, get_config, reduced, shape_applicable
+from repro.configs import ARCHS, SHAPES, reduced, shape_applicable
 from repro.configs.registry import ShapeSpec, concrete_batch
 from repro.models.config import FAMILY_AUDIO
 from repro.models.transformer import abstract_params, forward, init_params
-from repro.serving import decode_step, init_caches, prefill
+from repro.serving import decode_step, prefill
 from repro.train import TrainConfig, init_opt_state, make_train_step
 
 TINY = ShapeSpec("tiny", "train", 32, 2)

@@ -1,5 +1,4 @@
 """Ground-truth matcher semantics on hand-built graphs with known answers."""
-import numpy as np
 
 from repro.core.graph import GraphBuilder
 from repro.core.oracle import match_query

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import SCHEMES, partition_graph, partition_quality
-from repro.data.generators import imdb_like_graph, subgen_like_graph
+from repro.data.generators import imdb_like_graph
 
 
 @pytest.mark.parametrize("scheme", sorted(SCHEMES))

@@ -14,10 +14,9 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import (EngineConfig, MAX_SN, GraphSession, LoadStats,
-                        OPATEngine, PartitionStore, RunRequest,
-                        TraditionalMPEngine, build_catalog, build_partitions,
-                        generate_plan, match_query, partition_graph)
+from repro.core import (EngineConfig, MAX_SN, GraphSession, LoadStats, OPATEngine, PartitionStore,
+                        TraditionalMPEngine, build_catalog, build_partitions, generate_plan,
+                        match_query, partition_graph)
 from repro.data.generators import subgen_like_graph, subgen_queries
 
 
@@ -48,6 +47,67 @@ def test_cold_then_warm_accounting(setup):
     # a warm load returns the SAME committed device buffers, not a copy
     assert e0b.part["node_gid"] is e0.part["node_gid"]
     assert store.stats.hit_rate == 0.5
+
+
+def test_pin_blocks_lru_eviction(setup):
+    """A pinned entry survives over-capacity staging (the double-buffer
+    case: evaluate pid while the runner-up's H2D copy lands), and unpin
+    restores the capacity invariant by evicting LRU-first."""
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg, capacity_parts=1)
+    store.get(0)
+    store.pin(0)
+    store.get(1)                        # stages the runner-up: transient 2
+    assert sorted(store.resident_keys()) == [0, 1]
+    assert store.stats.evictions == 0
+    store.unpin(0)                      # capacity re-enforced: LRU (0) goes
+    assert store.resident_keys() == [1]
+    assert store.stats.evictions == 1
+    # the evaluated partition left; the runner-up is already warm
+    m0 = store.stats.misses
+    store.get(1)
+    assert store.stats.misses == m0
+
+
+def test_pin_refcounts_and_context_manager(setup):
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg, capacity_parts=1)
+    store.get(0)
+    store.pin(0)
+    with store.pinned(0):               # refcount 2
+        store.get(1)
+        assert sorted(store.resident_keys()) == [0, 1]
+    # context exit dropped one ref; the outer pin still protects 0
+    assert sorted(store.resident_keys()) == [0, 1]
+    store.unpin(0)
+    assert len(store.resident_keys()) == 1
+
+
+def test_pin_does_not_block_explicit_drop(setup):
+    """Pins only guard the implicit LRU path — drop/release/clear are
+    explicit owner decisions and still remove pinned entries."""
+    g, pg, cat, queries, _ = setup
+    store = PartitionStore(pg)
+    store.get(2)
+    with store.pinned(2):
+        assert store.drop(2) is True
+        assert not store.contains(2)
+    store.get(2)                        # re-stages cold, no stale pin state
+    assert store.contains(2)
+
+
+def test_pinned_answers_unchanged_under_capacity_one(setup):
+    """OPAT with prefetch + capacity 1: the double-buffered loop (pin
+    current, prefetch runner-up) stays oracle-identical."""
+    g, pg, cat, queries, _ = setup
+    for q in queries:
+        plan = generate_plan(q, g, cat)
+        store = PartitionStore(pg, capacity_parts=1)
+        eng = OPATEngine(pg, EngineConfig(cap=16384), store=store)
+        res = eng.run(plan, MAX_SN, seed=1)
+        ref = match_query(g, q, q_pad=8)
+        assert np.array_equal(np.unique(res.answers, axis=0), ref), q.name
+        assert not store._pins            # every pin released
 
 
 def test_lru_eviction_order(setup):

@@ -103,7 +103,10 @@ def test_moe_tp_matches_dense_single_rank():
 @pytest.mark.slow
 def test_moe_tp_matches_dense_multi_rank():
     """4 fake devices, mesh (1,4): expert weights sharded over model."""
-    import os, subprocess, sys, textwrap
+    import os
+    import subprocess
+    import sys
+    import textwrap
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

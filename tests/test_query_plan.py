@@ -1,11 +1,9 @@
 """Catalog, cost-based planning, query validation (paper Sec. 3)."""
-import numpy as np
 import pytest
 
 from repro.core import (build_catalog, generate_plan, make_path_query,
                         make_star_query)
-from repro.core.query import (OP_BY_NAME, Query, QueryEdge, QueryNode,
-                              QDIR_OUT)
+from repro.core.query import Query, QueryEdge, QueryNode
 from repro.data.generators import imdb_like_graph
 
 

@@ -14,11 +14,9 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import (EngineConfig, GraphSession, RepartitionConfig,
-                        WAW_SCHEME, answer_span_matrix, build_catalog,
-                        load_profile, match_disjunctive, match_query,
-                        partition_graph, partition_quality,
-                        repartition_assignment, reweight_edges)
+from repro.core import (EngineConfig, GraphSession, RepartitionConfig, WAW_SCHEME,
+                        answer_span_matrix, load_profile, match_disjunctive, partition_graph,
+                        partition_quality, repartition_assignment, reweight_edges)
 from repro.data.generators import (subgen_like_graph, subgen_queries,
                                    waw_skewed_graph, waw_skewed_queries)
 

@@ -4,19 +4,15 @@ The production meshes need 256/512 devices, so resolver logic is tested
 against a lightweight fake mesh (resolve() only reads axis_names/shape);
 NamedSharding construction is tested on the real 1-device mesh.
 """
-import types
 
 import numpy as np
-import pytest
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, reduced
 from repro.launch.mesh import make_test_mesh
-from repro.launch.sharding import (AXES_BY_NAME, ShardingRules,
-                                   param_shardings, opt_shardings,
-                                   batch_shardings, cache_shardings)
+from repro.launch.sharding import AXES_BY_NAME, ShardingRules, param_shardings, batch_shardings
 from repro.models.transformer import abstract_params
 
 
