@@ -282,6 +282,7 @@ class SharedPhase:
     loads_per_query: float
     p50_ms: float
     p95_ms: float
+    p99_ms: float
     qps: float             # queries per second over the phase wall clock
     wall_s: float
     n_answers: int
@@ -365,6 +366,7 @@ def run_shared_sweep(batch_sizes: Sequence[int] = (2, 4, 8),
             cold_loads=delta.cold_loads, warm_loads=delta.warm_loads,
             loads_per_query=n_loads / B,
             p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            p99_ms=_pct(lat, 0.99) * 1000,
             qps=B / wall if wall else 0.0, wall_s=wall,
             n_answers=sum(a.shape[0] for a in iso_answers.values())))
 
@@ -382,6 +384,7 @@ def run_shared_sweep(batch_sizes: Sequence[int] = (2, 4, 8),
             warm_loads=report.load_stats.warm_loads,
             loads_per_query=report.loads_per_query,
             p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            p99_ms=_pct(lat, 0.99) * 1000,
             qps=B / report.wall_s if report.wall_s else 0.0,
             wall_s=report.wall_s,
             n_answers=sum(a.shape[0] for a in sh_answers.values())))
@@ -411,6 +414,7 @@ class OocorePhase:
     bytes_disk: int
     p50_ms: float
     p95_ms: float
+    p99_ms: float
     wall_s: float
     n_answers: int
 
@@ -474,6 +478,7 @@ def run_oocore_sweep(k: int = K_PARTITIONS, scheme: str = "kway_shem",
             cold_loads=d.cold_loads, warm_loads=d.warm_loads,
             bytes_disk=d.bytes_disk,
             p50_ms=_pct(lat, 0.5) * 1000, p95_ms=_pct(lat, 0.95) * 1000,
+            p99_ms=_pct(lat, 0.99) * 1000,
             wall_s=wall,
             n_answers=sum(a.shape[0] for a in answers.values())), answers
 

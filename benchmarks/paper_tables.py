@@ -159,11 +159,11 @@ def table_shared(shared: SharedSweepResult, out_dir: str) -> str:
         rows.append([
             p.batch, p.mode, p.n_loads, f"{p.loads_per_query:.2f}",
             p.cold_loads, p.warm_loads,
-            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}",
+            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}", f"{p.p99_ms:.0f}",
             f"{p.qps:.1f}", p.n_answers,
         ])
     header = ["batch", "mode", "loads", "loads/query", "cold", "warm",
-              "p50 ms", "p95 ms", "q/s", "answers"]
+              "p50 ms", "p95 ms", "p99 ms", "q/s", "answers"]
     _csv(os.path.join(out_dir, "table_shared.csv"), header, rows)
     verdict = ("identical answer sets"
                if shared.answers_identical else "ANSWER SETS DIFFER")
@@ -185,10 +185,11 @@ def table_oocore(oocore: OocoreSweepResult, out_dir: str) -> str:
             p.mode, p.disk_reads,
             f"{p.read_ahead_hits}/{p.read_ahead_issued}",
             p.cold_loads, p.warm_loads, p.bytes_disk,
-            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}", p.n_answers,
+            f"{p.p50_ms:.0f}", f"{p.p95_ms:.0f}", f"{p.p99_ms:.0f}",
+            p.n_answers,
         ])
     header = ["mode", "disk reads", "ra hit/issued", "cold", "warm",
-              "disk bytes", "p50 ms", "p95 ms", "answers"]
+              "disk bytes", "p50 ms", "p95 ms", "p99 ms", "answers"]
     _csv(os.path.join(out_dir, "table_oocore.csv"), header, rows)
     verdict = ("identical answer sets"
                if oocore.answers_identical else "ANSWER SETS DIFFER")

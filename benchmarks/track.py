@@ -14,11 +14,15 @@ need to clear an absolute noise floor, since CI runners are shared).
 Schema (version 1):
   { "schema_version": 1, "utc_date": "...", "platform": {...},
     "shared":  [ {mode, batch, loads_per_query, cold_loads, warm_loads,
-                  p50_ms, p95_ms, qps}, ... ],
+                  p50_ms, p95_ms, p99_ms, qps}, ... ],
     "oocore":  [ {mode, disk_reads, read_ahead_hits, cold_loads,
-                  warm_loads, p50_ms, p95_ms}, ... ],
+                  warm_loads, p50_ms, p95_ms, p99_ms}, ... ],
     "kernel":  {shape, ref_ms, fused_ms, speedup},
     "roofline": {available, note} }
+
+(p99_ms joined within schema v1: the gate guards each timing key with a
+presence check, so points committed before the key exists still compare
+on the keys they have.)
 """
 from __future__ import annotations
 
@@ -58,6 +62,7 @@ def _collect_shared(seed: int) -> List[Dict]:
                  loads_per_query=round(p.loads_per_query, 4),
                  cold_loads=p.cold_loads, warm_loads=p.warm_loads,
                  p50_ms=round(p.p50_ms, 3), p95_ms=round(p.p95_ms, 3),
+                 p99_ms=round(p.p99_ms, 3),
                  qps=round(p.qps, 4))
             for p in res.phases]
 
@@ -70,7 +75,8 @@ def _collect_oocore(seed: int) -> List[Dict]:
     return [dict(mode=p.mode, disk_reads=p.disk_reads,
                  read_ahead_hits=p.read_ahead_hits,
                  cold_loads=p.cold_loads, warm_loads=p.warm_loads,
-                 p50_ms=round(p.p50_ms, 3), p95_ms=round(p.p95_ms, 3))
+                 p50_ms=round(p.p50_ms, 3), p95_ms=round(p.p95_ms, 3),
+                 p99_ms=round(p.p99_ms, 3))
             for p in res.phases]
 
 
@@ -204,8 +210,10 @@ def compare(current: Dict, baseline: Dict) -> List[str]:
         if worse_counter(c["cold_loads"], b["cold_loads"]):
             fails.append(f"{tag}.cold_loads {b['cold_loads']} -> "
                          f"{c['cold_loads']}")
-        for k in ("p50_ms", "p95_ms"):
-            if worse_ms(c[k], b[k]):
+        for k in ("p50_ms", "p95_ms", "p99_ms"):
+            # presence-guarded: baselines written before p99_ms joined the
+            # schema simply don't gate on it
+            if k in c and k in b and worse_ms(c[k], b[k]):
                 fails.append(f"{tag}.{k} {b[k]} -> {c[k]}")
         if worse_qps(c["qps"], b["qps"]):
             fails.append(f"{tag}.qps {b['qps']} -> {c['qps']}")
@@ -219,8 +227,8 @@ def compare(current: Dict, baseline: Dict) -> List[str]:
         for k in ("disk_reads", "cold_loads"):
             if worse_counter(c[k], b[k]):
                 fails.append(f"{tag}.{k} {b[k]} -> {c[k]}")
-        for k in ("p50_ms", "p95_ms"):
-            if worse_ms(c[k], b[k]):
+        for k in ("p50_ms", "p95_ms", "p99_ms"):
+            if k in c and k in b and worse_ms(c[k], b[k]):
                 fails.append(f"{tag}.{k} {b[k]} -> {c[k]}")
     return fails
 

@@ -102,7 +102,8 @@ def rank_partitions_shared(heuristic: str,
     total expected yield over every pending query waiting on them.
 
     ``waiting`` maps pid -> the per-waiting-query ``(sni_count,
-    completion_rate)`` or ``(sni_count, completion_rate, rounds_waiting)``
+    completion_rate)``, ``(sni_count, completion_rate, rounds_waiting)``,
+    or ``(sni_count, completion_rate, rounds_waiting, urgency)``
     observations for that partition (one tuple per query whose SNI/IMA
     makes the partition eligible).  Base scores:
 
@@ -122,6 +123,14 @@ def rank_partitions_shared(heuristic: str,
     hot score and is guaranteed service within
     ``O(max_hot_score / (gamma × sni))`` rounds.  ``gamma = 0`` (the
     default) is exactly the pure-yield ranking.
+
+    Deadline awareness: the SLO serving front end (serving/frontend.py)
+    attaches a per-query *urgency* — its slack-weighted deadline pressure
+    — as the observation's fourth element.  Every waiter then contributes
+    ``sni_q(p) × urgency_q`` on top of the base score, so partitions that
+    advance deadline-critical queries outrank hotter but slack-rich work.
+    All-zero (or absent) urgencies leave every score bit-identical to the
+    plain ranking, keeping non-SLO serving byte-for-byte unchanged.
 
     Ties are resolved randomly, matching ``rank_partitions``.
     """
@@ -144,6 +153,10 @@ def rank_partitions_shared(heuristic: str,
         scores = [s + fairness_gamma * sum(obs[0] * age_of(obs)
                                            for obs in waiting[p])
                   for s, p in zip(scores, pids)]
+    urgency = [sum(obs[0] * (float(obs[3]) if len(obs) > 3 else 0.0)
+                   for obs in waiting[p]) for p in pids]
+    if any(urgency):
+        scores = [s + u for s, u in zip(scores, urgency)]
     tie = rng.permutation(len(pids))
     order = sorted(range(len(pids)), key=lambda i: (-scores[i], int(tie[i])))
     return [pids[i] for i in order]

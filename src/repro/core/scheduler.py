@@ -42,9 +42,13 @@ Per-query bookkeeping correctness is preserved exactly: each job routes
 its evaluator outputs through the same ``absorb_eval_outputs`` as the
 one-query-at-a-time loop, so exhaustive answers are bit-identical to
 sequential ``GraphSession.submit`` (tests/test_scheduler.py asserts this
-for all three engines — non-OPAT engines have no host partition loop to
-share, so the scheduler drains their jobs sequentially with unchanged
-semantics).
+for all three engines).  TraditionalMP shares too: each round one stacked
+top-p bundle carries EVERY waiting query's inputs through the store and
+the engine's double-vmapped ``shared_evaluator()`` — B plans × p
+partitions in one compiled call (``_run_shared_tmp``).  MapReduceMP runs
+a whole query as one compiled program with no host partition loop to
+share, so the scheduler drains its jobs sequentially with unchanged
+semantics.
 
 ``LoadStats`` attribution is *round-scoped*: ``ScheduleReport.load_stats``
 is the store's exact delta over one ``run()`` (what the round cost), and
@@ -72,6 +76,7 @@ from .runner import RunReport, RunRequest, truncate_answers
 from .session import QueryResult
 from .state import BindingBatch, QueryState
 from .store import LoadStats
+from .traditional_mp import TraditionalMPEngine
 
 
 def batch_bucket(n: int) -> int:
@@ -96,6 +101,8 @@ class _Job:
     report: Optional[RunReport] = None   # sequential fallback: engine-built
     rounds_waiting: int = 0              # consecutive rounds passed over
                                          # (the fairness aging signal)
+    urgency: float = 0.0                 # deadline pressure (SLO front end:
+                                         # slack-weighted; 0 = no deadline)
 
 
 @dataclasses.dataclass
@@ -183,9 +190,15 @@ class QueryScheduler:
     # -- admission ---------------------------------------------------------
 
     def admit(self, query: Union[Query, DisjunctiveQuery],
-              max_answers: Optional[int] = None) -> int:
+              max_answers: Optional[int] = None,
+              urgency: float = 0.0) -> int:
         """Add a query to the pending set; returns its qid.  ``max_answers``
-        is the per-disjunct answer budget K, exactly as in ``submit``."""
+        is the per-disjunct answer budget K, exactly as in ``submit``.
+        ``urgency`` is the SLO front end's deadline-pressure weight: every
+        partition this query waits on gains ``SNI × urgency`` in the shared
+        ranking (0, the default, changes nothing — see
+        ``rank_partitions_shared``); update it per round via
+        ``set_urgency`` as slack shrinks."""
         self._check_binding()
         session = self.session
         cfg = session.config
@@ -205,11 +218,21 @@ class QueryScheduler:
             jobs.append(_Job(
                 qid=qid, plan=plan,
                 plan_arrays=PlanArrays.from_plan(plan, pad_steps=cfg.s_pad),
-                state=st, max_answers=max_answers))
+                state=st, max_answers=max_answers,
+                urgency=float(urgency)))
         self._admitted[qid] = _Admitted(qid=qid, name=query.name, jobs=jobs,
                                         max_answers=max_answers)
         self._jobs.extend(jobs)
         return qid
+
+    def set_urgency(self, qid: int, urgency: float) -> None:
+        """Refresh a pending query's deadline pressure (all its jobs); the
+        SLO front end calls this each pump as deadlines approach.  Unknown
+        (already-reported) qids are ignored — the query no longer ranks."""
+        rec = self._admitted.get(qid)
+        if rec is not None:
+            for j in rec.jobs:
+                j.urgency = float(urgency)
 
     def _check_binding(self) -> None:
         """A scheduler is bound to one session *binding*: its store, layout,
@@ -236,19 +259,27 @@ class QueryScheduler:
 
     # -- the shared-load loop ----------------------------------------------
 
-    def run(self) -> ScheduleReport:
+    def run(self, max_rounds: Optional[int] = None) -> ScheduleReport:
         """Serve every pending job to retirement and return the round's
         report.  Re-entrant: queries admitted after a ``run()`` are served
-        (and reported) by the next one."""
+        (and reported) by the next one.  ``max_rounds`` bounds this call:
+        at most that many partition-load rounds on the shared paths (whole
+        queries on the sequential fallback), leaving the rest pending —
+        the SLO front end pumps with ``max_rounds=1`` so admission and
+        urgency updates interleave with serving; None (default) drains
+        everything, exactly the pre-existing batch semantics."""
         self._check_binding()
         t0 = time.time()
         stats0 = self.store.stats.copy()
         loads0, batches0 = len(self.loads), len(self.batch_sizes)
-        shared = isinstance(self.session.engine, OPATEngine)
-        if shared:
-            self._run_shared(t0)
+        engine = self.session.engine
+        shared = isinstance(engine, (OPATEngine, TraditionalMPEngine))
+        if isinstance(engine, OPATEngine):
+            self._run_shared(t0, max_rounds)
+        elif isinstance(engine, TraditionalMPEngine):
+            self._run_shared_tmp(t0, max_rounds)
         else:
-            self._run_sequential(t0)
+            self._run_sequential(t0, max_rounds)
         report = ScheduleReport(
             results=self._collect_results(t0),
             loads=self.loads[loads0:],
@@ -258,12 +289,16 @@ class QueryScheduler:
             shared=shared)
         return report
 
-    def _run_shared(self, t0: float) -> None:
+    def _run_shared(self, t0: float,
+                    max_rounds: Optional[int] = None) -> None:
         engine: OPATEngine = self.session.engine
         beval = engine.batched_evaluator()
         rng = np.random.default_rng(self.seed)
         limit = 64 * self.pg.k * max(1, len(self._jobs))
+        rounds = 0
         while True:
+            if max_rounds is not None and rounds >= max_rounds:
+                break
             self._retire()
             waiters = self._waiters()
             if not waiters:
@@ -284,7 +319,8 @@ class QueryScheduler:
                             rates[id(j)] = j.state.completion_rates()
             scored = {p: [(j.state.sni_count(p),
                            rates[id(j)][p] if rates else 0.0,
-                           j.rounds_waiting)
+                           j.rounds_waiting,
+                           j.urgency)
                           for j in js]
                       for p, js in waiters.items()}
             ranked = rank_partitions_shared(
@@ -330,6 +366,144 @@ class QueryScheduler:
                 if not j.retired:
                     j.rounds_waiting = 0 if id(j) in in_batch \
                         else j.rounds_waiting + 1
+            rounds += 1
+
+    def _run_shared_tmp(self, t0: float,
+                        max_rounds: Optional[int] = None) -> None:
+        """TraditionalMP shared batching: each round ranks partitions with
+        the same workload-level heuristic, takes the TOP-P set (the
+        engine's p processors), and ships ONE stacked bundle through the
+        store carrying EVERY waiting query's inputs — the double-vmapped
+        ``TraditionalMPEngine.shared_evaluator()`` then evaluates B plans ×
+        p partitions in one compiled call.  Per-job SNI/IMA/FAA bookkeeping
+        is the sequential TMP loop's, verbatim (tail-kept cap chunking, one
+        chunk per iteration of the same partition), so exhaustive answers
+        stay bit-identical to per-query ``submit``."""
+        engine: TraditionalMPEngine = self.session.engine
+        seval = engine.shared_evaluator()
+        cfg = self.session.config
+        k = self.pg.k
+        p = engine.p
+        rng = np.random.default_rng(self.seed)
+        limit = 64 * self.pg.k * max(1, len(self._jobs))
+        rounds = 0
+        while True:
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+            self._retire()
+            waiters = self._waiters()
+            if not waiters:
+                break
+            if len(self.loads) >= limit:
+                raise RuntimeError("scheduler exceeded max partition loads "
+                                   f"({limit}); likely a routing bug")
+            rates = {}
+            if self.heuristic == MAX_YIELD_SHARED:
+                for js in waiters.values():
+                    for j in js:
+                        if id(j) not in rates:
+                            rates[id(j)] = j.state.completion_rates()
+            scored = {pp: [(j.state.sni_count(pp),
+                            rates[id(j)][pp] if rates else 0.0,
+                            j.rounds_waiting,
+                            j.urgency)
+                           for j in js]
+                      for pp, js in waiters.items()}
+            ranked = rank_partitions_shared(
+                self.heuristic, scored, rng,
+                fairness_gamma=self.fairness_gamma)
+            # canonical sorted order + first-pid padding, exactly as the
+            # per-query TMP loop: the stacked store key is then
+            # permutation-invariant across rounds (padding lanes are
+            # no-ops — idle processors — and sort in with the rest)
+            chosen = sorted(int(q) for q in ranked[:p])
+            lanes = sorted([(pid, True) for pid in chosen]
+                           + [(chosen[0], False)] * (p - len(chosen)))
+            exec_set = [t[0] for t in lanes]
+            is_real = [t[1] for t in lanes]
+            waiter_ids = {pid: {id(j) for j in js}
+                          for pid, js in waiters.items()}
+            # the round's batch: every job waiting on ANY chosen partition,
+            # in stable admit order (deduped — a job waiting on two chosen
+            # partitions gets ONE lane row with both its IMAs drained)
+            in_round = {id(j) for pid in chosen for j in waiters[pid]}
+            batch = [j for j in self._jobs
+                     if not j.retired and id(j) in in_round]
+            B = len(batch)
+            Bpad = batch_bucket(B)
+            plans = [j.plan_arrays for j in batch]
+            stacked = PlanArrays.stack(plans + [plans[0]] * (Bpad - B))
+            n_steps = np.asarray([j.plan.n_steps for j in batch]
+                                 + [1] * (Bpad - B), np.int32)
+            in_rows = np.full((Bpad, p, cfg.cap, cfg.q_pad), -1, np.int32)
+            in_step = np.zeros((Bpad, p, cfg.cap), np.int32)
+            in_valid = np.zeros((Bpad, p, cfg.cap), bool)
+            seeds = np.zeros((Bpad, p), bool)
+            lanes_of: List[List[int]] = []   # per job: real lanes it rode
+            for b, j in enumerate(batch):
+                mine: List[int] = []
+                for i, pid in enumerate(exec_set):
+                    if not is_real[i] or id(j) not in waiter_ids[pid]:
+                        continue
+                    mine.append(i)
+                    bb = j.state.ima[pid]
+                    j.state.ima[pid] = BindingBatch.empty(cfg.q_pad)
+                    if bb.n > cfg.cap:
+                        # tail kept for a later round of the same partition
+                        j.state.ima[pid] = BindingBatch(
+                            rows=bb.rows[cfg.cap:], step=bb.step[cfg.cap:])
+                        bb = BindingBatch(rows=bb.rows[: cfg.cap],
+                                          step=bb.step[: cfg.cap])
+                    if bb.n:
+                        in_rows[b, i, : bb.n] = bb.rows
+                        in_step[b, i, : bb.n] = bb.step
+                        in_valid[b, i, : bb.n] = True
+                    seeds[b, i] = bool(j.state.fresh_pending[pid])
+                    j.state.fresh_pending[pid] = False
+                lanes_of.append(mine)
+            ev0 = self.store.stats.copy()
+            entry = self.store.get_stacked(tuple(exec_set))
+            event = self.store.stats - ev0
+            res = seval(entry.part, entry.g2l, self.store.owner, stacked,
+                        n_steps, in_rows, in_step, in_valid, seeds)
+            overflow = np.asarray(res.overflow)
+            comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
+            out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
+            out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
+            for b, j in enumerate(batch):
+                for i in lanes_of[b]:
+                    if bool(overflow[b, i]):
+                        raise RuntimeError(
+                            f"evaluator buffer overflow on partition "
+                            f"{exec_set[i]} (query {j.plan.query.name!r} in "
+                            f"a batch of {B}); raise EngineConfig.cap "
+                            f"(currently {cfg.cap})")
+                    absorb_eval_outputs(j.state, exec_set[i], k,
+                                        comp_rows[b, i], int(comp_n[b, i]),
+                                        out_rows[b, i], out_step[b, i],
+                                        out_dest[b, i], int(out_n[b, i]))
+            # attribution: the stacked bundle is ONE store event; each
+            # chosen pid counts one workload load, and its batch size is
+            # the number of jobs its lane advanced
+            self.loads.extend(chosen)
+            for pid in chosen:
+                self.batch_sizes.append(
+                    sum(1 for b, j in enumerate(batch)
+                        if any(exec_set[i] == pid for i in lanes_of[b])))
+            for qid in {j.qid for j in batch}:
+                rec = self._admitted[qid]
+                rec.load_stats = rec.load_stats + event
+            self._touched.update(chosen)
+            in_batch = {id(j) for j in batch}
+            for b, j in enumerate(batch):
+                j.load_stats = j.load_stats + event
+                j.state.loads.extend(exec_set[i] for i in lanes_of[b])
+                j.state.iterations += 1
+            for j in self._jobs:
+                if not j.retired:
+                    j.rounds_waiting = 0 if id(j) in in_batch \
+                        else j.rounds_waiting + 1
+            rounds += 1
 
     def _eval_batch(self, beval, entry, pid: int, batch: List[_Job]) -> None:
         """One compiled call advances every waiting job's plan against the
@@ -381,15 +555,21 @@ class QueryScheduler:
                                     out_rows[b], out_step[b], out_dest[b],
                                     int(out_n[b]))
 
-    def _run_sequential(self, t0: float) -> None:
-        """Non-OPAT engines run a whole query as one (or few) compiled
-        program(s) with no host partition loop to share, so the scheduler
+    def _run_sequential(self, t0: float,
+                        max_rounds: Optional[int] = None) -> None:
+        """Engines with no host partition loop to share (MapReduceMP) run a
+        whole query as one (or few) compiled program(s), so the scheduler
         drains their jobs one query at a time — answers, budgets, and
-        per-call LoadStats deltas identical to sequential ``submit``."""
+        per-call LoadStats deltas identical to sequential ``submit``.
+        ``max_rounds`` bounds the number of QUERIES served this call."""
         session = self.session
+        served = 0
         for rec in self._admitted.values():
             if rec.finished_at is not None:
                 continue
+            if max_rounds is not None and served >= max_rounds:
+                break
+            served += 1
             ev0 = self.store.stats.copy()
             for j in rec.jobs:
                 jv0 = self.store.stats.copy()
@@ -479,7 +659,8 @@ class QueryScheduler:
                             prefetch_hits=delta.prefetch_hits,
                             disk_reads=delta.disk_reads,
                             read_ahead_hits=delta.read_ahead_hits),
-                        engine="opat", extra={"state": j.state})
+                        engine=self.session.engine_name,
+                        extra={"state": j.state})
                 reports.append(rep)
                 a = rep.answers
                 answers = a if answers is None else np.unique(
@@ -487,7 +668,7 @@ class QueryScheduler:
             results.append(QueryResult(
                 name=rec.name, answers=answers, reports=reports,
                 latency_s=max(0.0, rec.finished_at - t0),
-                load_stats=rec.load_stats))
+                load_stats=rec.load_stats, qid=rec.qid))
         for qid in done:
             del self._admitted[qid]
         self._jobs = [j for j in self._jobs if not j.retired]

@@ -71,6 +71,9 @@ class QueryResult:
     reports: List[RunReport]       # one per disjunct, in disjunct order
     latency_s: float
     load_stats: LoadStats          # this call's store delta (cold/warm/prefetch)
+    qid: Optional[int] = None      # scheduler admission id (None on submit);
+                                   # the SLO front end matches results back
+                                   # to requests with it
 
     @property
     def n_answers(self) -> int:
@@ -212,6 +215,14 @@ class GraphSession:
         self._span_rows = 0
         self._queries_served = 0
         self._answers_served = 0
+        # SLO serving accumulators (serving/frontend.py feeds these via
+        # record_serving; empty for plain submit/submit_many sessions, and
+        # workload_profile() only emits a "serving" block when non-empty —
+        # keeping non-SLO profiles byte-identical)
+        self._slo_counters: Dict[str, int] = {}
+        self._slo_shed_reasons: Dict[str, int] = {}
+        self._slo_latencies: Dict[str, List[float]] = {}
+        self._slo_deadline: Dict[str, List[int]] = {}
 
     # -- serving -----------------------------------------------------------
 
@@ -264,6 +275,37 @@ class GraphSession:
             heuristic=heuristic if heuristic is not None else MAX_YIELD_SHARED,
             seed=seed, release_retired=release_retired,
             fairness_gamma=fairness_gamma)
+
+    def frontend(self, **kwargs) -> "Any":
+        """A ``ServingFrontend`` bound to this session
+        (serving/frontend.py): continuous-arrival serving with admission
+        control, cost prediction, deadline scheduling, and load shedding.
+        Keyword arguments pass through (``slo_classes``, ``cost_model``,
+        ``shed_policy``, ``replay_speed``, ...).  With no SLO classes the
+        front end delegates to ``submit_many`` byte-identically."""
+        from ..serving.frontend import ServingFrontend
+        return ServingFrontend(self, **kwargs)
+
+    def record_serving(self, *, counters: Dict[str, int],
+                       shed_by_reason: Dict[str, int],
+                       latencies: Dict[str, List[float]],
+                       deadline_met: Dict[str, List[bool]]) -> None:
+        """Fold one ``ServingFrontend.serve`` run's admission/shed counters
+        and per-SLO-class latencies into the session's workload profile
+        (the ``"serving"`` block of ``workload_profile()``)."""
+        for key, n in counters.items():
+            self._slo_counters[key] = self._slo_counters.get(key, 0) + int(n)
+        for reason, n in shed_by_reason.items():
+            self._slo_shed_reasons[reason] = \
+                self._slo_shed_reasons.get(reason, 0) + int(n)
+        for cls, vals in latencies.items():
+            self._slo_latencies.setdefault(cls, []).extend(
+                float(v) for v in vals)
+        for cls, oks in deadline_met.items():
+            met = self._slo_deadline.setdefault(cls, [0, 0])
+            for ok in oks:
+                met[0] += int(bool(ok))
+                met[1] += 1
 
     def submit_many(self, queries: Sequence[Union[Query, DisjunctiveQuery]],
                     max_answers: Union[None, int,
@@ -349,6 +391,12 @@ class GraphSession:
         per-partition LOAD sequence, so the repartitioner skips its
         load-share split-pressure term; the ``answer_spans`` block is
         observed host-side from the answers and is valid for every engine.
+
+        Sessions served through the SLO front end additionally carry a
+        ``"serving"`` block: admission/degrade/shed counters, shed reasons,
+        and per-SLO-class p50/p95/p99 latency + deadline attainment.  Plain
+        sessions emit no such block, so their profiles stay byte-identical
+        to pre-SLO builds.
         """
         partitions = []
         for p in range(self.k):
@@ -362,7 +410,7 @@ class GraphSession:
                 # Laplace-smoothed, matching heuristics.MAX_YIELD
                 "completion_rate": (comp + 1.0) / (comp + spawn + 2.0),
             })
-        return {
+        profile: Dict[str, Any] = {
             "engine": self.engine_name,
             "scheme": self.scheme,
             "k": self.k,
@@ -388,6 +436,29 @@ class GraphSession:
             "out_of_core": self.out_of_core,
             "cache": self.store.stats.to_dict(),
         }
+        if self._slo_counters or self._slo_latencies:
+            def _pct(vals: List[float], q: float) -> float:
+                return float(np.percentile(np.asarray(vals), q * 100.0)) \
+                    if vals else 0.0
+            profile["serving"] = {
+                "counters": dict(sorted(self._slo_counters.items())),
+                "shed_by_reason": dict(sorted(
+                    self._slo_shed_reasons.items())),
+                "classes": {
+                    cls: {
+                        "served": len(vals),
+                        "p50_latency_s": _pct(vals, 0.5),
+                        "p95_latency_s": _pct(vals, 0.95),
+                        "p99_latency_s": _pct(vals, 0.99),
+                        "deadline_met": self._slo_deadline.get(
+                            cls, [0, 0])[0],
+                        "deadline_total": self._slo_deadline.get(
+                            cls, [0, 0])[1],
+                    }
+                    for cls, vals in sorted(self._slo_latencies.items())
+                },
+            }
+        return profile
 
     def save_profile(self, path: str) -> None:
         """Persist ``workload_profile()`` as JSON — the self-contained

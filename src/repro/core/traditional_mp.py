@@ -53,7 +53,26 @@ class TraditionalMPEngine:
         # vmapped over (partition arrays, g2l row, inputs); plan broadcast
         self._veval = jax.jit(jax.vmap(
             self._eval, in_axes=(0, 0, None, None, None, 0, 0, 0, 0)))
+        self._seval = None       # lazy: the queries x partitions double-vmap
         self.store = store if store is not None else PartitionStore(pg)
+
+    def shared_evaluator(self):
+        """The *stacked top-p, multi-query* evaluator: ``vmap`` over the
+        query axis wrapped around this engine's per-query partition-vmap —
+        one compiled call evaluates B stacked plans against the same p
+        stacked partitions (inputs [B, p, ...]; partition arrays and the
+        owner map broadcast across queries, each query keeps its own plan,
+        n_steps, per-lane IMA rows, and seed flags).  This is how the
+        ``QueryScheduler`` shares one top-p load across every waiting
+        query (core/scheduler.py): the paper's p processors each advance
+        the whole workload, not one query.  Built lazily — per-query
+        serving never pays the extra trace."""
+        if self._seval is None:
+            self._seval = jax.jit(jax.vmap(
+                jax.vmap(self._eval,
+                         in_axes=(0, 0, None, None, None, 0, 0, 0, 0)),
+                in_axes=(None, None, None, 0, 0, 0, 0, 0, 0)))
+        return self._seval
 
     def run(self, plan: Plan, heuristic: str, seed: int = 0,
             max_iterations: Optional[int] = None,

@@ -11,19 +11,28 @@ counts, latency) plus the store's cold/warm/prefetch split; the ``--json``
 report additionally carries the session's cache counters and per-partition
 workload profile (the input of core/repartition.py).
 
-Two serving modes:
+Three serving modes:
 
   * default — the dataset's query batch, one ``submit`` per query (the
     paper's one-at-a-time shape);
   * ``--workload file.jsonl`` — a batch of queries (one JSON query per
-    line, optional per-line ``"max_answers"``) served through the
-    shared-load ``QueryScheduler`` (core/scheduler.py): overlapping
-    queries share partition loads, plans are evaluated batched, and the
-    report adds aggregate throughput (queries/sec, loads-per-query,
-    latency percentiles).  ``--emit-workload file.jsonl`` writes the
-    dataset's own queries in that format and exits, so the two flags
-    round-trip.  ``--verify`` keeps the same oracle exit-code contract in
-    both modes.
+    line, optional per-line ``"max_answers"``, ``"arrival_ms"``,
+    ``"slo_class"``) served through the shared-load ``QueryScheduler``
+    (core/scheduler.py): overlapping queries share partition loads, plans
+    are evaluated batched, and the report adds aggregate throughput
+    (queries/sec, loads-per-query, latency percentiles).
+    ``--emit-workload file.jsonl`` writes the dataset's own queries in
+    that format and exits (``--emit-repeat`` / ``--emit-arrival-spacing-ms``
+    / ``--emit-slo-classes`` synthesize overload workloads; combined with
+    ``--workload`` it round-trips an existing file losslessly).
+    ``--verify`` keeps the same oracle exit-code contract in all modes.
+  * ``--slo SPEC`` — SLO serving through the ``ServingFrontend``
+    (serving/frontend.py, docs/frontend.md): cost-predicted admission
+    control, deadline-aware scheduling, and degrade/defer/shed under
+    ``--shed-policy``; per-line arrivals replay on a scalable clock
+    (``--arrival-replay``).  Served queries verify under their EFFECTIVE
+    (possibly degraded) budget; a shed query missing its ``shed_reason``
+    fails the ``--verify`` gate like an oracle mismatch.
 
 Out-of-core serving: ``--save-graph DIR`` persists the session's
 partitioned graph as a graph directory (storage/format.py), and
@@ -163,6 +172,42 @@ def main() -> None:
                          "shared ranking of --workload batch mode; 0 = "
                          "pure yield, >0 bounds starvation of no-overlap "
                          "queries under skew")
+    ap.add_argument("--slo", default="", metavar="SPEC",
+                    help="SLO serving mode: comma-separated "
+                         "name=deadline_seconds classes (e.g. "
+                         "'interactive=0.5,batch=5,exhaustive=inf'; order "
+                         "is priority order, known names keep their "
+                         "strictness flags).  Queries are served through "
+                         "the ServingFrontend (serving/frontend.py): "
+                         "cost-predicted admission, deadline-aware "
+                         "ranking, degrade/defer/shed under --shed-policy")
+    ap.add_argument("--shed-policy", default="predictive",
+                    choices=["predictive", "deadline", "never"],
+                    help="SLO mode overload response: 'predictive' "
+                         "degrades (shrinks K), defers, then sheds from "
+                         "predicted backlog vs deadline; 'deadline' sheds "
+                         "anything predicted to miss; 'never' admits all")
+    ap.add_argument("--arrival-replay", type=float, default=0.0,
+                    metavar="SPEED",
+                    help="replay the workload's per-line arrival_ms on a "
+                         "scalable clock: 1.0 = real time, 2.0 = twice as "
+                         "fast, 0 (default) = instant (every arrival due "
+                         "immediately, deterministic)")
+    ap.add_argument("--default-slo", default="",
+                    help="SLO class for workload lines (or dataset "
+                         "queries) that carry no slo_class of their own "
+                         "(default: none — such queries get no deadline)")
+    ap.add_argument("--emit-repeat", type=int, default=1, metavar="N",
+                    help="with --emit-workload: write the dataset's query "
+                         "batch N times over (an overload-scale workload)")
+    ap.add_argument("--emit-arrival-spacing-ms", type=float, default=None,
+                    metavar="MS",
+                    help="with --emit-workload: attach arrival_ms = "
+                         "line_index * MS to every emitted line (a "
+                         "constant-rate arrival process)")
+    ap.add_argument("--emit-slo-classes", default="", metavar="A,B,...",
+                    help="with --emit-workload: attach slo_class round-"
+                         "robin from this comma-separated list")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -189,10 +234,27 @@ def main() -> None:
         print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
 
     if args.emit_workload:
+        if args.workload:
+            # round-trip: re-emit an existing workload file's parsed lines
+            # losslessly (arrival_ms / slo_class / max_answers included)
+            with open(args.workload) as f:
+                out_lines = [json.loads(ln) for ln in f if ln.strip()]
+        else:
+            out_lines = []
+            classes = [c for c in args.emit_slo_classes.split(",") if c]
+            for rep_i in range(max(1, args.emit_repeat)):
+                for dq in dqueries:
+                    d = dq.to_json_dict()
+                    i = len(out_lines)
+                    if args.emit_arrival_spacing_ms is not None:
+                        d["arrival_ms"] = i * args.emit_arrival_spacing_ms
+                    if classes:
+                        d["slo_class"] = classes[i % len(classes)]
+                    out_lines.append(d)
         with open(args.emit_workload, "w") as f:
-            for dq in dqueries:
-                f.write(json.dumps(dq.to_json_dict()) + "\n")
-        print(f"[serve] wrote {len(dqueries)} queries to "
+            for d in out_lines:
+                f.write(json.dumps(d) + "\n")
+        print(f"[serve] wrote {len(out_lines)} queries to "
               f"{args.emit_workload}")
         return
 
@@ -229,7 +291,56 @@ def main() -> None:
               f"{total} shard bytes (reopen with --graph-dir)")
 
     throughput = None
-    if args.workload:
+    slo_report = None
+    if args.slo:
+        from repro.serving import (Request, parse_slo_spec,
+                                   requests_from_workload)
+        classes = parse_slo_spec(args.slo)
+        default_slo = args.default_slo or None
+        if default_slo and default_slo not in {c.name for c in classes}:
+            sys.exit(f"[serve] --default-slo {default_slo!r} is not in the "
+                     f"--slo spec")
+        if args.workload:
+            with open(args.workload) as f:
+                lines = [json.loads(ln) for ln in f if ln.strip()]
+            requests = requests_from_workload(
+                lines, default_slo=default_slo,
+                default_max_answers=args.max_answers)
+        else:
+            requests = [Request(dq, slo_class=default_slo,
+                                max_answers=args.max_answers)
+                        for dq in dqueries]
+        print(f"[serve] slo serving: {len(requests)} requests, classes "
+              f"[{', '.join(f'{c.name}={c.deadline_s}s' for c in classes)}]"
+              f", policy={args.shed_policy}, "
+              f"replay={f'x{args.arrival_replay:g}' if args.arrival_replay > 0 else 'instant'}")
+        fe = session.frontend(slo_classes=classes,
+                              shed_policy=args.shed_policy,
+                              heuristic=args.shared_heuristic,
+                              fairness_gamma=args.fairness_gamma,
+                              replay_speed=args.arrival_replay)
+        slo_report = fe.serve(requests)
+        lat = [o.latency_s for o in slo_report.served]
+        qps = (len(slo_report.served) / slo_report.wall_s
+               if slo_report.wall_s else 0.0)
+        throughput = {
+            "n_queries": len(slo_report.served),
+            "wall_s": slo_report.wall_s,
+            "qps": qps,
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "fairness_gamma": args.fairness_gamma,
+            "slo": {
+                "classes": slo_report.per_class,
+                "counters": slo_report.counters,
+                "shed_by_reason": slo_report.shed_by_reason,
+                "rounds": slo_report.rounds,
+                "shed_policy": args.shed_policy,
+                "cost_model": fe.cost_model.snapshot(),
+            },
+        }
+    elif args.workload:
         with open(args.workload) as f:
             lines = [json.loads(l) for l in f if l.strip()]
         wqueries = [DisjunctiveQuery.from_json_dict(d) for d in lines]
@@ -252,6 +363,7 @@ def main() -> None:
             "batch_sizes": report.batch_sizes,
             "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
             "cold_loads": report.load_stats.cold_loads,
             "warm_loads": report.load_stats.warm_loads,
             "prefetch_hits": report.load_stats.prefetch_hits,
@@ -264,8 +376,40 @@ def main() -> None:
         served = ((dq, session.submit(dq, max_answers=args.max_answers),
                    args.max_answers) for dq in dqueries)
 
+    if slo_report is not None:
+        # each served outcome verifies under its EFFECTIVE budget (a
+        # degraded query's shrunken K is the contract it was served
+        # under); a shed query must carry an explicit shed_reason —
+        # missing one is a gate failure like an oracle mismatch
+        served = (((req.query if hasattr(req.query, "disjuncts")
+                    else DisjunctiveQuery([req.query],
+                                          name=req.query.name)),
+                   o.result, o.max_answers)
+                  for req, o in zip(requests, slo_report.outcomes)
+                  if o.status == "ok")
+        slo_extras = iter(
+            [{"status": "ok", "slo_class": o.slo_class,
+              "degraded": o.degraded, "deferred": o.deferred,
+              "deadline_s": o.deadline_s, "deadline_met": o.deadline_met,
+              "predicted_latency_s": o.predicted_latency_s,
+              "effective_max_answers": o.max_answers}
+             for o in slo_report.served])
+
     records = []
     mismatches = 0
+    if slo_report is not None:
+        for o in slo_report.shed:
+            print(f"[serve] {o.name}: SHED ({o.shed_reason}) "
+                  f"class={o.slo_class} "
+                  f"predicted={o.predicted_latency_s*1000:.0f} ms vs "
+                  f"deadline={o.deadline_s*1000:.0f} ms")
+            if args.verify and not o.shed_reason:
+                mismatches += 1
+            records.append({"query": o.name, "status": "shed",
+                            "slo_class": o.slo_class,
+                            "shed_reason": o.shed_reason,
+                            "predicted_latency_s": o.predicted_latency_s,
+                            "deadline_s": o.deadline_s})
     for dq, res, budget in served:
         answers = res.answers
         n_loads = res.n_loads
@@ -284,6 +428,8 @@ def main() -> None:
                "prefetch_hits": ls.prefetch_hits,
                "disk_reads": ls.disk_reads,
                "read_ahead_hits": ls.read_ahead_hits}
+        if slo_report is not None:
+            rec.update(next(slo_extras))
         if args.verify:
             from repro.core.oracle import match_disjunctive
             ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
@@ -305,7 +451,7 @@ def main() -> None:
                   f"{'MATCH' if match else 'MISMATCH'}")
         records.append(rec)
 
-    if throughput is not None:
+    if throughput is not None and "workload_loads" in throughput:
         print(f"[serve] throughput: {throughput['n_queries']} queries in "
               f"{throughput['wall_s']:.2f}s -> {throughput['qps']:.1f} q/s, "
               f"{throughput['workload_loads']} workload loads "
@@ -313,7 +459,20 @@ def main() -> None:
               f"cold={throughput['cold_loads']} "
               f"warm={throughput['warm_loads']}), "
               f"p50={throughput['p50_latency_s']*1000:.0f} ms "
-              f"p95={throughput['p95_latency_s']*1000:.0f} ms")
+              f"p95={throughput['p95_latency_s']*1000:.0f} ms "
+              f"p99={throughput['p99_latency_s']*1000:.0f} ms")
+    elif throughput is not None:
+        c = throughput["slo"]["counters"]
+        print(f"[serve] slo: {c['arrived']} arrived, {c['admitted']} "
+              f"admitted, {c['served']} served "
+              f"({c['degraded']} degraded, {c['deferred']} deferred), "
+              f"{c['shed']} shed {throughput['slo']['shed_by_reason']}, "
+              f"{throughput['slo']['rounds']} scheduler rounds")
+        for cls, pc in throughput["slo"]["classes"].items():
+            print(f"[serve]   {cls}: {int(pc['served'])} served, "
+                  f"p50={pc['p50_latency_s']*1000:.0f} ms "
+                  f"p95={pc['p95_latency_s']*1000:.0f} ms "
+                  f"p99={pc['p99_latency_s']*1000:.0f} ms")
 
     cache = session.load_stats.to_dict()
     print(f"[serve] session cache: {cache['cold_loads']} cold / "

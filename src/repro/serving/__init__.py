@@ -1,3 +1,14 @@
+from .cost import CostEstimate, CostModel, required_partition_mask, \
+    work_units
 from .decode import (init_caches, abstract_caches, prefill, decode_step)
+from .frontend import (FrontendReport, Request, RequestOutcome, SLOClass,
+                       ServingFrontend, default_slo_classes, parse_slo_spec,
+                       requests_from_workload)
 
-__all__ = ["init_caches", "abstract_caches", "prefill", "decode_step"]
+__all__ = [
+    "init_caches", "abstract_caches", "prefill", "decode_step",
+    "CostEstimate", "CostModel", "required_partition_mask", "work_units",
+    "FrontendReport", "Request", "RequestOutcome", "SLOClass",
+    "ServingFrontend", "default_slo_classes", "parse_slo_spec",
+    "requests_from_workload",
+]

@@ -81,7 +81,10 @@ def test_submit_many_matches_sequential_submit(setup, engine_name):
     seq_res = [seq.submit(dq) for dq in dqueries]
     sh = make_session(g, engine_name, k=k)
     report = sh.submit_many(dqueries)
-    assert report.shared == (engine_name == "opat")
+    # OPAT and TraditionalMP both share (OPAT: one partition advancing the
+    # batch; TMP: one stacked top-p bundle carrying every waiter's plans);
+    # MapReduceMP has no host loop to share and drains sequentially
+    assert report.shared == (engine_name in ("opat", "traditional"))
     assert [r.name for r in report.results] == [dq.name for dq in dqueries]
     for sres, bres, dq in zip(seq_res, report.results, dqueries):
         assert np.array_equal(sres.answers, bres.answers), dq.name

@@ -1,0 +1,423 @@
+"""SLO-aware serving front end (serving/cost.py, serving/frontend.py).
+
+Covers the ISSUE-7 satellite/acceptance list:
+  * cost-model monotonicity in SNI and CC, and calibration convergence
+    under a constant synthetic latency;
+  * admission-time prediction is catalog/manifest-only (in-RAM and
+    out-of-core sessions price identically, no shard ever read);
+  * no-SLO front end is byte-identical to plain ``submit_many`` (answers
+    AND the partition-load schedule);
+  * seeded overload: the strict class is fully served, only lower classes
+    degrade/shed, the shed set is deterministic across runs, counters are
+    exact, and every shed outcome carries a ``shed_reason``;
+  * non-shed answers oracle-identical under the effective budget;
+  * TraditionalMP shared batching: stacked top-p answers bit-identical to
+    sequential submit, with real multi-query sharing observed;
+  * deadline-ordering: urgency outranks hotter slack-rich work in the
+    shared partition ranking.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GraphSession, MAX_YIELD_SHARED,
+                        match_disjunctive, rank_partitions_shared)
+from repro.core.plan import generate_plan
+from repro.data.generators import subgen_like_graph, subgen_queries
+from repro.serving import (CostModel, Request, SLOClass, default_slo_classes,
+                           parse_slo_spec, required_partition_mask,
+                           requests_from_workload, work_units)
+from repro.serving.frontend import SHED_DEADLINE
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = subgen_like_graph(n_nodes=250, n_edges=700, n_embed=10, seed=3)
+    dqueries = subgen_queries(g)
+    refs = {dq.name: match_disjunctive(g, dq, q_pad=8) for dq in dqueries}
+    return g, dqueries, refs
+
+
+def make_session(g, engine="opat", k=4, **kw):
+    return GraphSession(g, k=k, scheme="kway_shem", engine=engine, seed=1,
+                        processors=2, config=EngineConfig(cap=32768), **kw)
+
+
+# ---------------------------------------------------------------------------
+# cost model: monotonicity + calibration (satellite)
+# ---------------------------------------------------------------------------
+
+def test_work_units_monotone_in_sni_and_cc():
+    sni = np.array([10, 20, 0, 5])
+    cc = np.array([1, 2, 1, 3])
+    req = np.array([True, True, False, True])
+    base = work_units(sni, cc, req)
+    # more seeded SNI mass in a required partition -> more work
+    assert work_units(sni + 5, cc, req) > base
+    # a more fragmented required partition -> more work
+    cc2 = cc.copy(); cc2[1] += 4
+    assert work_units(sni, cc2, req) > base
+    # growing the required set -> more work
+    req2 = np.array([True, True, True, True])
+    assert work_units(sni, cc, req2) >= base
+    # a longer plan multiplies everything
+    assert work_units(sni, cc, req, n_steps=3) > base
+    # CC of an UNREQUIRED partition is irrelevant
+    cc3 = cc.copy(); cc3[2] += 100
+    assert work_units(sni, cc3, req) == base
+
+
+def test_cost_model_predicts_from_catalog_only(setup, tmp_path):
+    """In-RAM and out-of-core-reopened sessions price identically: the
+    model reads only start_label_counts + manifest components, never a
+    shard (the OOC session performs zero disk reads while predicting)."""
+    g, dqueries, _ = setup
+    ram = make_session(g)
+    ram.save(str(tmp_path / "gdir"))
+    ooc = GraphSession.open(str(tmp_path / "gdir"),
+                            config=EngineConfig(cap=32768), seed=1)
+    cm_ram, cm_ooc = CostModel(ram.pg), CostModel(ooc.pg)
+    reads0 = ooc.load_stats.disk_reads
+    for dq in dqueries:
+        plans_r = [generate_plan(q, ram.graph, ram.catalog)
+                   for q in dq.disjuncts]
+        plans_o = [generate_plan(q, ooc.graph, ooc.catalog)
+                   for q in dq.disjuncts]
+        er = cm_ram.predict_plans(plans_r, 16)
+        eo = cm_ooc.predict_plans(plans_o, 16)
+        assert er.work_units == pytest.approx(eo.work_units)
+        assert er.loads == eo.loads > 0
+        for p_r in plans_r:
+            assert required_partition_mask(ram.pg, p_r).shape == (ram.k,)
+    assert ooc.load_stats.disk_reads == reads0     # no shard was touched
+
+
+def test_cost_model_budget_factor_monotone(setup):
+    g, dqueries, _ = setup
+    sess = make_session(g)
+    cm = CostModel(sess.pg)
+    plans = [generate_plan(q, sess.graph, sess.catalog)
+             for q in dqueries[0].disjuncts]
+    exhaustive = cm.predict_plans(plans, None).work_units
+    assert cm.predict_plans(plans, 0).work_units == 0.0   # K=0: no work
+    small = cm.predict_plans(plans, 1).work_units
+    big = cm.predict_plans(plans, 10_000).work_units
+    assert 0.0 < small <= big <= exhaustive
+    assert big == pytest.approx(exhaustive)   # huge K = no budget discount
+
+
+def test_cost_model_calibration_converges(setup):
+    """EWMA calibration: after ~50 observations of a constant latency the
+    prediction lands within 5% (and the model reports calibrated)."""
+    g, dqueries, _ = setup
+    sess = make_session(g)
+    cm = CostModel(sess.pg, default_rate_s=123.0)   # far-off initial rate
+    plans = [generate_plan(q, sess.graph, sess.catalog)
+             for q in dqueries[0].disjuncts]
+    assert not cm.calibrated
+    true_latency = 0.25
+    for _ in range(50):
+        est = cm.predict_plans(plans, None)
+        cm.observe(est, true_latency)
+    assert cm.calibrated and cm.observations == 50
+    final = cm.predict_plans(plans, None)
+    assert final.latency_s == pytest.approx(true_latency, rel=0.05)
+    # a nearby bucket borrows the calibrated rate rather than the default
+    other = cm.predict_plans(plans, 1)
+    assert other.calibrated
+    snap = cm.snapshot()
+    assert snap["observations"] == 50 and snap["rates_s_per_unit"]
+
+
+def test_parse_slo_spec():
+    classes = parse_slo_spec("interactive=0.5,batch=5,exhaustive=inf")
+    assert [c.name for c in classes] == ["interactive", "batch", "exhaustive"]
+    assert classes[0].deadline_s == 0.5 and classes[0].priority == 0
+    assert not classes[0].sheddable          # strict default kept
+    assert classes[1].sheddable and classes[1].degradable
+    assert math.isinf(classes[2].deadline_s) and classes[2].deferrable
+    # unknown names become degradable+sheddable, priority by position
+    custom = parse_slo_spec("gold=1,silver=10")
+    assert custom[0].name == "gold" and custom[0].sheddable
+    assert custom[1].priority == 1
+    with pytest.raises(ValueError):
+        parse_slo_spec("noequals")
+    with pytest.raises(ValueError):
+        parse_slo_spec("bad=-1")
+    with pytest.raises(ValueError):
+        parse_slo_spec("")
+
+
+# ---------------------------------------------------------------------------
+# byte-identity without SLOs (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_no_slo_frontend_byte_identical_to_submit_many(setup):
+    """Acceptance: with no SLO configured, answers AND the scheduling
+    (workload load sequence, batch sizes) are byte-identical to plain
+    ``submit_many``."""
+    g, dqueries, _ = setup
+    plain = make_session(g)
+    ref = plain.submit_many(dqueries, max_answers=8)
+    fe_sess = make_session(g)
+    fe = fe_sess.frontend(slo_classes=[])
+    rep = fe.serve([Request(dq, max_answers=8) for dq in dqueries])
+    assert rep.schedule is not None
+    assert rep.schedule.loads == ref.loads
+    assert rep.schedule.batch_sizes == ref.batch_sizes
+    assert [o.name for o in rep.outcomes] == [r.name for r in ref.results]
+    for o, r in zip(rep.outcomes, ref.results):
+        assert np.array_equal(o.result.answers, r.answers)
+    assert rep.counters["shed"] == 0 if "shed" in rep.counters else True
+    # the profile carries no "serving" block -> byte-identical profiles
+    assert "serving" not in fe_sess.workload_profile()
+    assert fe_sess.workload_profile() == plain.workload_profile()
+
+
+def test_all_none_slo_requests_take_plain_path(setup):
+    g, dqueries, _ = setup
+    sess = make_session(g)
+    fe = sess.frontend()          # classes configured, but no request uses one
+    rep = fe.serve([Request(dq) for dq in dqueries])
+    assert rep.schedule is not None and rep.per_class == {}
+
+
+# ---------------------------------------------------------------------------
+# seeded overload: deadlines, degradation, shedding (acceptance)
+# ---------------------------------------------------------------------------
+
+def overload_frontend(sess, **kw):
+    """A deterministically overloaded front end: the uncalibrated default
+    rate prices every query at ~10s, far beyond the batch deadline."""
+    cm = CostModel(sess.pg, default_rate_s=2.0)
+    classes = [
+        SLOClass("interactive", deadline_s=60.0, priority=0),
+        SLOClass("batch", deadline_s=0.004, priority=1,
+                 degradable=True, sheddable=True),
+    ]
+    return sess.frontend(cost_model=cm, slo_classes=classes, **kw)
+
+
+def overload_requests(dqueries):
+    return [Request(dq, slo_class=("interactive" if i % 2 == 0 else "batch"),
+                    max_answers=16)
+            for i, dq in enumerate(dqueries * 3)]
+
+
+def test_overload_sheds_only_lower_classes_deterministically(setup):
+    """Acceptance: under seeded overload the strict class is fully served
+    (meeting its deadline), only sheddable classes shed — each with an
+    explicit shed_reason — the counters are exact, and two identical runs
+    produce the identical shed set."""
+    g, dqueries, refs = setup
+
+    def run():
+        sess = make_session(g)
+        fe = overload_frontend(sess)
+        rep = fe.serve(overload_requests(dqueries))
+        return sess, rep
+
+    sess, rep = run()
+    interactive = [o for o in rep.outcomes if o.slo_class == "interactive"]
+    assert interactive and all(o.status == "ok" for o in interactive)
+    assert all(o.deadline_met for o in interactive)
+    shed = rep.shed
+    assert shed, "the overload must shed something"
+    assert all(o.slo_class == "batch" for o in shed)
+    assert all(o.shed_reason == SHED_DEADLINE for o in shed)
+    # exact counters
+    n = len(overload_requests(dqueries))
+    assert rep.counters["arrived"] == n
+    assert rep.counters["shed"] == len(shed)
+    assert rep.counters["served"] == n - len(shed)
+    assert rep.counters["admitted"] == n - len(shed)
+    assert rep.shed_by_reason == {SHED_DEADLINE: len(shed)}
+    # non-shed answers oracle-identical under the effective budget
+    for o in rep.served:
+        ref = refs[o.name]
+        refset = {tuple(r) for r in ref}
+        assert all(tuple(r) in refset for r in o.result.answers), o.name
+        budget = o.max_answers
+        assert o.result.answers.shape[0] >= min(budget, ref.shape[0])
+    # deterministic: an identical second run sheds the identical set
+    _, rep2 = run()
+    assert [(o.name, o.slo_class, o.shed_reason) for o in rep2.shed] == \
+        [(o.name, o.slo_class, o.shed_reason) for o in shed]
+    assert rep2.counters == rep.counters
+    # the session profile gained the serving block with the same counters
+    prof = sess.workload_profile()
+    assert prof["serving"]["counters"]["shed"] == rep.counters["shed"]
+    assert prof["serving"]["shed_by_reason"] == rep.shed_by_reason
+    assert "interactive" in prof["serving"]["classes"]
+
+
+def test_degradation_shrinks_budget_before_shedding(setup):
+    """A batch query whose FULL-budget prediction misses the deadline but
+    whose degraded (K=degraded_max_answers) prediction fits is served
+    degraded — correct answers under the shrunken budget, exact
+    counters."""
+    g, dqueries, refs = setup
+    sess = make_session(g)
+    cm = CostModel(sess.pg, default_rate_s=2.0)
+    # deadline sized so the degraded estimate fits but the full one misses:
+    # budget factor floors at min_budget_frac=0.05 -> 20x shrink available
+    plans = [generate_plan(q, sess.graph, sess.catalog)
+             for q in dqueries[0].disjuncts]
+    full = cm.predict_plans(plans, 10_000).latency_s
+    degraded = cm.predict_plans(plans, 4).latency_s
+    assert degraded < full
+    deadline = (degraded + full) / 2
+    classes = [SLOClass("batch", deadline_s=deadline, priority=0,
+                        degradable=True, sheddable=True,
+                        degraded_max_answers=4)]
+    fe = sess.frontend(cost_model=cm, slo_classes=classes)
+    rep = fe.serve([Request(dqueries[0], slo_class="batch",
+                            max_answers=10_000)])
+    assert rep.counters == {"arrived": 1, "admitted": 1, "served": 1,
+                            "degraded": 1, "deferred": 0, "shed": 0}
+    o = rep.outcomes[0]
+    assert o.status == "ok" and o.degraded and o.max_answers == 4
+    ref = refs[dqueries[0].name]
+    refset = {tuple(r) for r in ref}
+    assert all(tuple(r) in refset for r in o.result.answers)
+    assert o.result.answers.shape[0] >= min(4, ref.shape[0])
+
+
+def test_exhaustive_defers_until_drain(setup):
+    """Deferrable (exhaustive) work parks while deadline work is in flight
+    and is served at drain — still exhaustively correct."""
+    g, dqueries, refs = setup
+    sess = make_session(g)
+    fe = sess.frontend()          # default classes: exhaustive is deferrable
+    reqs = [Request(dqueries[0], slo_class="exhaustive"),
+            Request(dqueries[1], slo_class="interactive", max_answers=8),
+            Request(dqueries[2], slo_class="interactive", max_answers=8)]
+    rep = fe.serve(reqs)
+    assert rep.counters["deferred"] == 1
+    ex = next(o for o in rep.outcomes if o.slo_class == "exhaustive")
+    assert ex.status == "ok" and ex.deferred
+    assert np.array_equal(ex.result.answers, refs[dqueries[0].name])
+    # the deferred query finished no earlier than every interactive one
+    for o in rep.outcomes:
+        if o.slo_class == "interactive":
+            assert o.finished_round <= ex.finished_round
+
+
+def test_shed_policy_deadline_and_never(setup):
+    g, dqueries, _ = setup
+    n = len(overload_requests(dqueries))
+    sess = make_session(g)
+    rep = overload_frontend(sess, shed_policy="deadline").serve(
+        overload_requests(dqueries))
+    assert rep.counters["shed"] > 0 and rep.counters["degraded"] == 0
+    assert all(o.shed_reason == "deadline-policy" for o in rep.shed)
+    sess2 = make_session(g)
+    rep2 = overload_frontend(sess2, shed_policy="never").serve(
+        overload_requests(dqueries))
+    assert rep2.counters == {"arrived": n, "admitted": n, "served": n,
+                             "degraded": 0, "deferred": 0, "shed": 0}
+    with pytest.raises(ValueError, match="shed_policy"):
+        sess2.frontend(shed_policy="bogus")
+    with pytest.raises(ValueError, match="unknown slo_class"):
+        overload_frontend(make_session(g)).serve(
+            [Request(dqueries[0], slo_class="platinum")])
+
+
+# ---------------------------------------------------------------------------
+# deadline ordering in the shared ranking
+# ---------------------------------------------------------------------------
+
+def test_urgency_outranks_hotter_slack_rich_work():
+    """The urgency term (obs[3]): a deadline-critical query's partition
+    outranks a hotter one, and all-zero urgency is bit-identical to the
+    plain ranking."""
+    rng = np.random.default_rng(0)
+    # pid 0 is hotter (summed yield 15); pid 1's lone waiter is urgent
+    waiting = {0: [(10, 0.5, 0, 0.0), (20, 0.5, 0, 0.0)],
+               1: [(6, 0.5, 0, 0.0)]}
+    assert rank_partitions_shared(MAX_YIELD_SHARED, waiting, rng)[0] == 0
+    waiting[1] = [(6, 0.5, 0, 1000.0)]
+    assert rank_partitions_shared(MAX_YIELD_SHARED, waiting, rng)[0] == 1
+    # all-zero urgency: same scores, same order as the 2/3-tuple forms
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    flat = {0: [(10, 0.5, 0, 0.0)], 1: [(10, 0.5, 0, 0.0)]}
+    bare = {0: [(10, 0.5)], 1: [(10, 0.5)]}
+    assert rank_partitions_shared(MAX_YIELD_SHARED, flat, rng_a) == \
+        rank_partitions_shared(MAX_YIELD_SHARED, bare, rng_b)
+
+
+def test_scheduler_set_urgency_threads_to_jobs(setup):
+    g, dqueries, _ = setup
+    sess = make_session(g)
+    sched = sess.scheduler()
+    qid = sched.admit(dqueries[0], urgency=2.5)
+    assert all(j.urgency == 2.5 for j in sched._admitted[qid].jobs)
+    sched.set_urgency(qid, 7.0)
+    assert all(j.urgency == 7.0 for j in sched._admitted[qid].jobs)
+    sched.set_urgency(999, 1.0)          # unknown qid: ignored
+    report = sched.run()
+    assert report.results[0].qid == qid  # results carry the admission id
+
+
+# ---------------------------------------------------------------------------
+# TraditionalMP shared batching (tentpole roll-in)
+# ---------------------------------------------------------------------------
+
+def test_tmp_shared_stacked_batching_shares_loads(setup):
+    """TraditionalMP through the scheduler: one stacked top-p bundle
+    carries several queries' plans (batch_sizes > 1 observed), answers
+    bit-identical to sequential submit."""
+    g, dqueries, refs = setup
+    seq = make_session(g, engine="traditional")
+    seq_answers = [seq.submit(dq).answers for dq in dqueries]
+    sh = make_session(g, engine="traditional")
+    report = sh.submit_many(dqueries * 2)      # overlap guarantees sharing
+    assert report.shared
+    assert max(report.batch_sizes) > 1         # real multi-query sharing
+    for res, dq in zip(report.results, dqueries * 2):
+        assert np.array_equal(res.answers, refs[dq.name]), dq.name
+    for res, ref_a in zip(report.results[:len(dqueries)], seq_answers):
+        assert np.array_equal(res.answers, ref_a)
+
+
+def test_frontend_works_on_traditional_engine(setup):
+    g, dqueries, refs = setup
+    sess = make_session(g, engine="traditional")
+    fe = sess.frontend()
+    rep = fe.serve([Request(dq, slo_class="interactive")
+                    for dq in dqueries])
+    assert all(o.status == "ok" for o in rep.outcomes)
+    for o in rep.outcomes:
+        assert np.array_equal(o.result.answers, refs[o.name]), o.name
+
+
+# ---------------------------------------------------------------------------
+# workload JSONL: arrivals + SLO classes ride along (satellite)
+# ---------------------------------------------------------------------------
+
+def test_requests_from_workload_lines(setup):
+    g, dqueries, _ = setup
+    lines = []
+    for i, dq in enumerate(dqueries):
+        d = dq.to_json_dict()
+        d["arrival_ms"] = i * 10.0
+        if i % 2 == 0:
+            d["slo_class"] = "interactive"
+        lines.append(d)
+    reqs = requests_from_workload(lines, default_slo="batch",
+                                  default_max_answers=5)
+    assert [r.arrival_s for r in reqs] == [0.0, 0.01, 0.02]
+    assert [r.slo_class for r in reqs] == ["interactive", "batch",
+                                           "interactive"]
+    assert all(r.max_answers == 5 for r in reqs)
+    assert [r.query.name for r in reqs] == [dq.name for dq in dqueries]
+
+
+def test_default_slo_classes_shape():
+    classes = default_slo_classes()
+    by_name = {c.name: c for c in classes}
+    assert not by_name["interactive"].sheddable       # strict
+    assert by_name["batch"].degradable and by_name["batch"].sheddable
+    assert by_name["exhaustive"].deferrable
+    assert [c.priority for c in classes] == [0, 1, 2]
