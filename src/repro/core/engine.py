@@ -167,12 +167,19 @@ def _expand_classify(rows_b, step_b, lidx_b, m, part, g2l_row, owner, aux,
 
 
 def make_partition_evaluator(node_pad: int, ell_width: int, cfg: EngineConfig):
-    """Build the jitted evaluator for a fixed padded geometry."""
+    """Build the jitted evaluator.
 
-    Np, W, Q, S = node_pad, ell_width, cfg.q_pad, cfg.s_pad
+    Geometry-agnostic: the padded node count ``Np`` and ELLPACK width ``W``
+    are read off the *input array shapes* at trace time (``node_pad`` /
+    ``ell_width`` are advisory — kept in the signature for callers that
+    size buffers up front), so one returned callable serves partitions of
+    any geometry; jit retraces per distinct shape.  This is what lets a
+    pinned old generation and a freshly compacted generation with grown
+    padding share one evaluator (storage/deltas.py).
+    """
+
+    Q, S = cfg.q_pad, cfg.s_pad
     CAP = cfg.cap
-    WT = CAP + Np  # work buffer: incoming rows + fresh seeds
-    EB = min(cfg.expand_block, WT)  # can't select more rows than exist
 
     def _frontier_local(rows, step, valid, plan, n_steps, g2l_row, n_core):
         """active mask + local index of each row's next frontier vertex."""
@@ -204,6 +211,10 @@ def make_partition_evaluator(node_pad: int, ell_width: int, cfg: EngineConfig):
                  seed_fresh: jax.Array) -> EvalResult:
         n_core = part["n_core"]
         pid = part["pid"]
+        Np = part["node_label"].shape[0]   # static at trace time
+        W = part["ell_dst"].shape[1]
+        WT = CAP + Np  # work buffer: incoming rows + fresh seeds
+        EB = min(cfg.expand_block, WT)  # can't select more rows than exist
 
         if cfg.use_pallas:
             # locality tables for the fused kernel: computed once per call,

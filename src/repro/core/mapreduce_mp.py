@@ -116,11 +116,8 @@ class MapReduceMPEngine:
 
     def _build(self, plan_pad_steps: int):
         cfg = self.cfg
-        Np = self.pg.node_pad
-        W = self.pg.ell_width
         Q, S = cfg.q_pad, cfg.s_pad
         CAP = cfg.cap
-        EB = min(cfg.expand_block, CAP + Np)
         PP, quota = self.P, self.quota
         FAA_CAP = cfg.cap
         axis = self.axis
@@ -166,6 +163,11 @@ class MapReduceMPEngine:
             node_gid = part["node_gid"][0]
             pdict = {k: v[0] for k, v in part.items()}
             g2l_row = g2l_row[0]
+            # geometry off the input shapes (static at trace time) — one
+            # engine serves any padded layout; jit retraces per shape
+            Np = node_label.shape[0]
+            W = pdict["ell_dst"].shape[1]
+            EB = min(cfg.expand_block, CAP + Np)
 
             if cfg.use_pallas:
                 # locality tables for the fused kernel — once per query,

@@ -53,6 +53,11 @@ class RunStats:
     # Zero for in-RAM sessions; None on hand-built RunStats.
     disk_reads: Optional[int] = None
     read_ahead_hits: Optional[int] = None
+    # streaming updates (storage/deltas.py): the graph generation this run
+    # was pinned to — every load above resolved against that generation's
+    # snapshot, even if a compaction published a newer one mid-run.  None
+    # for in-RAM sessions (no generations) and hand-built RunStats.
+    generation: Optional[int] = None
 
     @property
     def n_loads(self) -> int:

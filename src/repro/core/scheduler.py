@@ -60,6 +60,7 @@ queries' store traffic into a result's counters.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Set, Union
@@ -172,6 +173,19 @@ class QueryScheduler:
         self.fairness_gamma = float(fairness_gamma)
         self.pg = session.pg
         self.store = session.store
+        # generation pinning (storage/deltas.py): the scheduler takes its
+        # OWN pin on the session's current view at construction — every
+        # round of every run() resolves loads, SNI counts, and plans
+        # against that one generation, even while mutations land and
+        # compactions publish newer ones mid-run.  The pin keeps the
+        # generation's files out of GC until close().  In-RAM sessions
+        # have no view and nothing changes.
+        self.view = getattr(session, "current_view", None)
+        if self.view is not None:
+            self.view.pin()
+        self._graph = session.graph
+        self._catalog = session.catalog
+        self._closed = False
         self.heuristic = heuristic
         self.seed = session.seed if seed is None else seed
         self.release_retired = release_retired
@@ -208,7 +222,10 @@ class QueryScheduler:
                      else [query])
         jobs: List[_Job] = []
         for q in disjuncts:
-            plan = generate_plan(q, session.graph, session.catalog)
+            # plans and SNI counts come from the scheduler's PINNED
+            # binding, not the session's live one — one scheduler, one
+            # generation, even for queries admitted after a mutation
+            plan = generate_plan(q, self._graph, self._catalog)
             assert plan.n_slots <= cfg.q_pad and plan.n_steps <= cfg.s_pad
             counts = self.pg.start_label_counts(plan.start_label,
                                                 plan.start_value_op,
@@ -237,15 +254,30 @@ class QueryScheduler:
     def _check_binding(self) -> None:
         """A scheduler is bound to one session *binding*: its store, layout,
         and SNI counts all name the assignment that existed at construction.
-        ``GraphSession.repartition()`` rebinds the session (new store, new
-        pids/paddings), which would silently mix layouts — refuse loudly."""
-        if (self.session.store is not self.store
-                or self.session.pg is not self.pg):
+        ``GraphSession.repartition()``/``fold()`` rebind the session (NEW
+        store, new pids/paddings), which would silently mix layouts —
+        refuse loudly.  Streaming mutations/compactions are fine: they
+        keep the store and the scheduler keeps serving its pinned
+        generation view (generation-qualified cache keys isolate it from
+        newer views sharing the same store)."""
+        if self.session.store is not self.store:
             raise RuntimeError(
-                "the session was rebound (repartition()?) after this "
-                "scheduler was created; its pending state names the old "
-                "layout — create a fresh scheduler via "
+                "the session was rebound (repartition()/fold()?) after "
+                "this scheduler was created; its pending state names the "
+                "old layout — create a fresh scheduler via "
                 "GraphSession.scheduler()/submit_many()")
+        if self._closed:
+            raise RuntimeError("this scheduler was close()d — its "
+                               "generation pin is gone; create a fresh one")
+
+    def close(self) -> None:
+        """Release the scheduler's generation pin (idempotent).  After the
+        last pin on a superseded generation goes, the next compaction's GC
+        may reclaim that generation's unreferenced files."""
+        if not self._closed:
+            self._closed = True
+            if self.view is not None:
+                self.view.release()
 
     @property
     def n_pending(self) -> int:
@@ -274,12 +306,17 @@ class QueryScheduler:
         loads0, batches0 = len(self.loads), len(self.batch_sizes)
         engine = self.session.engine
         shared = isinstance(engine, (OPATEngine, TraditionalMPEngine))
-        if isinstance(engine, OPATEngine):
-            self._run_shared(t0, max_rounds)
-        elif isinstance(engine, TraditionalMPEngine):
-            self._run_shared_tmp(t0, max_rounds)
-        else:
-            self._run_sequential(t0, max_rounds)
+        # every load this call issues resolves against the scheduler's
+        # pinned generation, whatever the session's live view is by now
+        ctx = (self.store.viewing(self.view) if self.view is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if isinstance(engine, OPATEngine):
+                self._run_shared(t0, max_rounds)
+            elif isinstance(engine, TraditionalMPEngine):
+                self._run_shared_tmp(t0, max_rounds)
+            else:
+                self._run_sequential(t0, max_rounds)
         report = ScheduleReport(
             results=self._collect_results(t0),
             loads=self.loads[loads0:],
@@ -564,25 +601,34 @@ class QueryScheduler:
         ``max_rounds`` bounds the number of QUERIES served this call."""
         session = self.session
         served = 0
-        for rec in self._admitted.values():
-            if rec.finished_at is not None:
-                continue
-            if max_rounds is not None and served >= max_rounds:
-                break
-            served += 1
-            ev0 = self.store.stats.copy()
-            for j in rec.jobs:
-                jv0 = self.store.stats.copy()
-                rep = session.engine.run_request(RunRequest(
-                    plan=j.plan, heuristic=session.heuristic,
-                    max_answers=j.max_answers, seed=self.seed))
-                j.retired = True
-                j.report = rep  # engine-built report reused verbatim
-                j.load_stats = j.load_stats + (self.store.stats - jv0)
-                self.loads.extend(rep.stats.loads)
-                self.batch_sizes.extend([1] * len(rep.stats.loads))
-            rec.load_stats = rec.load_stats + (self.store.stats - ev0)
-            rec.finished_at = time.time()
+        # the engine reads its pg attribute at call time; hold it to the
+        # scheduler's pinned binding for the drain so a mutation landing
+        # mid-run can't mix generations into the ranking
+        engine = session.engine
+        prev_pg = engine.pg
+        engine.pg = self.pg
+        try:
+            for rec in self._admitted.values():
+                if rec.finished_at is not None:
+                    continue
+                if max_rounds is not None and served >= max_rounds:
+                    break
+                served += 1
+                ev0 = self.store.stats.copy()
+                for j in rec.jobs:
+                    jv0 = self.store.stats.copy()
+                    rep = engine.run_request(RunRequest(
+                        plan=j.plan, heuristic=session.heuristic,
+                        max_answers=j.max_answers, seed=self.seed))
+                    j.retired = True
+                    j.report = rep  # engine-built report reused verbatim
+                    j.load_stats = j.load_stats + (self.store.stats - jv0)
+                    self.loads.extend(rep.stats.loads)
+                    self.batch_sizes.extend([1] * len(rep.stats.loads))
+                rec.load_stats = rec.load_stats + (self.store.stats - ev0)
+                rec.finished_at = time.time()
+        finally:
+            engine.pg = prev_pg
 
     # -- retirement and the waiter index -----------------------------------
 
@@ -630,6 +676,7 @@ class QueryScheduler:
         """Build the finished queries' results (admit order) and prune
         their state — a streaming scheduler's footprint stays proportional
         to the pending set, not to its serving history."""
+        gen = int(self.view.generation) if self.view is not None else None
         results: List[QueryResult] = []
         done: List[int] = []
         for rec in self._admitted.values():
@@ -661,6 +708,7 @@ class QueryScheduler:
                             read_ahead_hits=delta.read_ahead_hits),
                         engine=self.session.engine_name,
                         extra={"state": j.state})
+                rep.stats.generation = gen
                 reports.append(rep)
                 a = rep.answers
                 answers = a if answers is None else np.unique(
@@ -668,7 +716,7 @@ class QueryScheduler:
             results.append(QueryResult(
                 name=rec.name, answers=answers, reports=reports,
                 latency_s=max(0.0, rec.finished_at - t0),
-                load_stats=rec.load_stats, qid=rec.qid))
+                load_stats=rec.load_stats, qid=rec.qid, generation=gen))
         for qid in done:
             del self._admitted[qid]
         self._jobs = [j for j in self._jobs if not j.retired]

@@ -40,6 +40,7 @@ disk → pinned-host → device cache tiers with identical answers.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import time
@@ -74,6 +75,9 @@ class QueryResult:
     qid: Optional[int] = None      # scheduler admission id (None on submit);
                                    # the SLO front end matches results back
                                    # to requests with it
+    generation: Optional[int] = None   # the graph generation this result was
+                                       # pinned to (storage/deltas.py); None
+                                       # for in-RAM sessions — no generations
 
     @property
     def n_answers(self) -> int:
@@ -153,6 +157,12 @@ class GraphSession:
         self._mesh = mesh
         self.repartitions = 0
         self.store: Optional[PartitionStore] = None
+        # streaming updates (storage/deltas.py): a session built by
+        # ``open`` owns the directory's writer handle and keeps one pinned
+        # generation view current; in-RAM sessions have neither and
+        # ``mutate``/``compact``/``snapshot`` raise
+        self._mdir: Optional[Any] = None
+        self._view: Optional[Any] = None
         self._bind(pg)
 
     def _bind(self, pg: PartitionedGraph) -> None:
@@ -243,19 +253,30 @@ class GraphSession:
         t0 = time.time()
         reports: List[RunReport] = []
         answers: Optional[np.ndarray] = None
-        for q in disjuncts:
-            plan = generate_plan(q, self.graph, self.catalog)
-            rep = self.engine.run_request(RunRequest(
-                plan=plan, heuristic=h, max_answers=max_answers, seed=s))
-            reports.append(rep)
-            a = rep.answers
-            answers = a if answers is None else np.unique(
-                np.concatenate([answers, a]), axis=0)
+        # the whole call runs against ONE pinned generation view: a
+        # mutation or compaction landing mid-query never changes what this
+        # query's loads resolve to (new submits pick up the latest view)
+        view = self._view
+        ctx = (self.store.viewing(view) if view is not None
+               else contextlib.nullcontext())
+        with ctx:
+            for q in disjuncts:
+                plan = generate_plan(q, self.graph, self.catalog)
+                rep = self.engine.run_request(RunRequest(
+                    plan=plan, heuristic=h, max_answers=max_answers, seed=s))
+                reports.append(rep)
+                a = rep.answers
+                answers = a if answers is None else np.unique(
+                    np.concatenate([answers, a]), axis=0)
         latency = time.time() - t0
+        gen = int(view.generation) if view is not None else None
+        for rep in reports:
+            rep.stats.generation = gen
         self._absorb(reports, answers)
         return QueryResult(name=query.name, answers=answers, reports=reports,
                            latency_s=latency,
-                           load_stats=self.store.stats - stats0)
+                           load_stats=self.store.stats - stats0,
+                           generation=gen)
 
     def scheduler(self, heuristic: Optional[str] = None,
                   seed: Optional[int] = None,
@@ -338,9 +359,12 @@ class GraphSession:
         sched = self.scheduler(heuristic=heuristic, seed=seed,
                                release_retired=release_retired,
                                fairness_gamma=fairness_gamma)
-        for q, b in zip(queries, budgets):
-            sched.admit(q, max_answers=b)
-        report = sched.run()
+        try:
+            for q, b in zip(queries, budgets):
+                sched.admit(q, max_answers=b)
+            report = sched.run()
+        finally:
+            sched.close()   # drop the scheduler's generation pin
         for res in report.results:
             self._absorb(res.reports, res.answers)
         return report
@@ -398,18 +422,25 @@ class GraphSession:
         sessions emit no such block, so their profiles stay byte-identical
         to pre-SLO builds.
         """
+        pending = (self._mdir.pending_counts()
+                   if self._mdir is not None else None)
         partitions = []
         for p in range(self.k):
             comp = int(self._completed[p])
             spawn = int(self._spawned[p])
-            partitions.append({
+            entry = {
                 "pid": p,
                 "loads": int(self._loads[p]),
                 "completed": comp,
                 "spawned": spawn,
                 # Laplace-smoothed, matching heuristics.MAX_YIELD
                 "completion_rate": (comp + 1.0) / (comp + spawn + 2.0),
-            })
+            }
+            if pending is not None:
+                # per-partition pending delta volume: the hot-update
+                # signal continuous repartitioning (fold) keys off
+                entry["delta_count"] = int(pending[p])
+            partitions.append(entry)
         profile: Dict[str, Any] = {
             "engine": self.engine_name,
             "scheme": self.scheme,
@@ -436,6 +467,10 @@ class GraphSession:
             "out_of_core": self.out_of_core,
             "cache": self.store.stats.to_dict(),
         }
+        if self._mdir is not None:
+            profile["generation"] = int(self._view.generation)
+            profile["pending_deltas"] = int(sum(pending))
+            profile["compactions"] = int(self._mdir.compactions)
         if self._slo_counters or self._slo_latencies:
             def _pct(vals: List[float], q: float) -> float:
                 return float(np.percentile(np.asarray(vals), q * 100.0)) \
@@ -515,16 +550,179 @@ class GraphSession:
         Answers are identical to a session over the in-RAM graph; only
         residency (and ``LoadStats.disk_reads`` / ``read_ahead_hits``)
         differs.
+
+        The directory opens *mutable* (storage/deltas.py): the session
+        binds a pinned generation view, ``mutate``/``add_edge``/... append
+        durable delta records, and ``compact``/``fold`` publish new
+        generations — in-flight queries keep their pinned view, new
+        submits pick up the latest.
         """
-        from ..storage.format import DiskCatalog, OutOfCorePartitionedGraph
-        backing = DiskCatalog(path, verify_checksums=verify_checksums)
-        pg = OutOfCorePartitionedGraph(backing)
-        return cls(pg=pg, engine=engine, heuristic=heuristic, config=config,
+        from ..storage.deltas import open_mutable
+        mdir = open_mutable(path, verify_checksums=verify_checksums)
+        view = mdir.snapshot()
+        pg = view.as_partitioned_graph()
+        sess = cls(pg=pg, engine=engine, heuristic=heuristic, config=config,
                    cache_parts=cache_parts, cache_bytes=cache_bytes,
                    host_cache_parts=host_cache_parts,
                    host_cache_bytes=host_cache_bytes, read_ahead=read_ahead,
                    processors=processors, prefetch=prefetch, seed=seed,
                    mesh=mesh)
+        sess._mdir = mdir
+        sess._view = view
+        return sess
+
+    # -- streaming updates (storage/deltas.py) -----------------------------
+
+    @property
+    def mutable(self) -> bool:
+        """True when the session owns a writable graph directory."""
+        return self._mdir is not None
+
+    @property
+    def current_view(self):
+        """The session's pinned GenerationView (None: in-RAM session)."""
+        return self._view
+
+    @property
+    def generation(self) -> Optional[int]:
+        """Generation new submits run against (None: in-RAM session)."""
+        return int(self._view.generation) if self._view is not None else None
+
+    def _require_mutable(self) -> "Any":
+        if self._mdir is None:
+            raise RuntimeError(
+                "streaming updates need a disk-backed session — build one "
+                "with GraphSession.open(path) over a save()d directory")
+        return self._mdir
+
+    def snapshot(self):
+        """A fresh pinned GenerationView of the latest generation + deltas
+        (caller releases).  While any snapshot stays pinned, the files its
+        generation needs survive every later compaction's GC."""
+        return self._require_mutable().snapshot()
+
+    def _refresh_view(self) -> None:
+        """Re-pin the latest generation and rebind the pg-level state on
+        top of the UNCHANGED store — generation-qualified cache keys keep
+        old-view entries valid for their pins while new submits resolve
+        against the new view; nothing is invalidated."""
+        mdir = self._mdir
+        old = self._view
+        self._view = mdir.snapshot()
+        if old is not None:
+            old.release()
+        pg = self._view.as_partitioned_graph()
+        self.pg = pg
+        self.graph = pg.graph
+        self.catalog = build_catalog(self.graph)
+        self.engine.pg = pg
+        self.store.pg = pg
+        self.store.backing = mdir.catalog
+        self.store.host_tier.catalog = mdir.catalog
+        self._backing = mdir.catalog
+        if self._vertex_span.shape[0] < self.graph.n_nodes:
+            self._vertex_span = np.concatenate([
+                self._vertex_span,
+                np.zeros(self.graph.n_nodes - self._vertex_span.shape[0],
+                         dtype=np.int64)])
+
+    def mutate(self, ops: Sequence[Dict[str, Any]]) -> List[Any]:
+        """Apply a batch of update operations durably (each a dict:
+        ``{"op": "edge_add"|"edge_del"|"vertex_add"|"vertex_del", ...}``,
+        see ``MutableGraphDirectory.apply_op``) and advance the session's
+        view once.  Returns the appended ``DeltaRecord``s."""
+        mdir = self._require_mutable()
+        recs = [mdir.apply_op(d) for d in ops]
+        self._refresh_view()
+        return recs
+
+    def add_edge(self, u: int, v: int, label: str,
+                 directed: bool = False) -> "Any":
+        rec = self._require_mutable().add_edge(u, v, label, directed=directed)
+        self._refresh_view()
+        return rec
+
+    def del_edge(self, u: int, v: int, label: str) -> "Any":
+        rec = self._require_mutable().del_edge(u, v, label)
+        self._refresh_view()
+        return rec
+
+    def add_vertex(self, label: str, value: float = float("nan"),
+                   pid: Optional[int] = None) -> "Any":
+        rec = self._require_mutable().add_vertex(label, value=value, pid=pid)
+        self._refresh_view()
+        return rec
+
+    def del_vertex(self, gid: int) -> "Any":
+        rec = self._require_mutable().del_vertex(gid)
+        self._refresh_view()
+        return rec
+
+    def compact(self, pid: int) -> int:
+        """Fold one partition's pending deltas into a fresh shard
+        generation (manifest commit is the publish point) and advance the
+        session's view; returns the published generation.  Queries pinned
+        to older views keep serving them until released."""
+        mdir = self._require_mutable()
+        gen = mdir.compact(int(pid))
+        self._refresh_view()
+        return gen
+
+    def compact_all(self) -> int:
+        mdir = self._require_mutable()
+        gen = mdir.compact_all()
+        self._refresh_view()
+        return gen
+
+    def compact_hot(self, min_pending: int = 1) -> List[int]:
+        """Compact every partition with at least ``min_pending`` pending
+        delta records — the background maintenance policy the mutation
+        soak (launch/serve.py --mutate-workload) runs between queries.
+        Returns the pids compacted."""
+        mdir = self._require_mutable()
+        pending = mdir.pending_counts()
+        hot = [p for p in range(self.k) if int(pending[p]) >= min_pending]
+        for p in hot:
+            mdir.compact(p)
+        if hot:
+            self._refresh_view()
+        return hot
+
+    def fold(self, repartition: bool = False, *,
+             seed: Optional[int] = None,
+             config: Optional[Any] = None) -> Dict[str, Any]:
+        """Fold the overlay into a brand-new full layout on disk and
+        rebind the session to it — the heavyweight maintenance step
+        ``compact`` amortizes away, and (with ``repartition=True``) the
+        continuous-repartitioning trigger: hot-update partitions observed
+        by ``workload_profile()`` reshape the layout, the new generation
+        is re-``save``d in the background of pinned readers, and the
+        session ``open``s it live.  Returns the published manifest."""
+        mdir = self._require_mutable()
+        if repartition:
+            from .repartition import RepartitionConfig, repartition as _repart
+            cfg = config if config is not None else RepartitionConfig()
+            new_pg = _repart(self.pg, self.workload_profile(),
+                             seed=seed, config=cfg)
+            self.repartitions += 1
+        else:
+            new_pg = build_partitions(
+                self.graph,
+                np.asarray(self._view.assignment, dtype=np.int64),
+                self.k, scheme=self.scheme)
+        manifest = mdir.resave(new_pg)
+        old = self._view
+        self._view = mdir.snapshot()
+        if old is not None:
+            old.release()
+        self._backing = mdir.catalog
+        # a full re-layout invalidates pid meanings — rebind the whole
+        # stack (store, engine, profile counters), exactly as
+        # ``repartition()`` does for in-RAM sessions
+        self._bind(self._view.as_partitioned_graph())
+        self.graph = self.pg.graph
+        self.catalog = build_catalog(self.graph)
+        return manifest
 
     # -- the WawPart loop --------------------------------------------------
 
@@ -556,7 +754,13 @@ class GraphSession:
         # partitions instead (and _bind closes the old store, joining any
         # in-flight read-ahead and invalidating its host-cache entries).
         # The graph directory on disk is untouched until save() writes
-        # the new layout back (fresh manifest last).
+        # the new layout back (fresh manifest last).  A mutable session
+        # moves in-RAM too: its view pin is released and further mutate()
+        # calls raise (use fold(repartition=True) to re-layout in place).
+        if self._view is not None:
+            self._view.release()
+            self._view = None
+            self._mdir = None
         self._backing = None
         self._bind(new_pg)
         self.repartitions += 1

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
@@ -97,6 +98,10 @@ class LoadStats:
                                  # evaluation instead of blocking a get)
     bytes_disk: int = 0          # bytes read off disk (demand + read-ahead)
     host_evictions: int = 0      # host-LRU entries dropped to fit capacity
+    delta_overlays: int = 0      # bundles rebuilt from a generation view's
+                                 # pending delta overlay (stale pids staged
+                                 # through apply_records instead of a clean
+                                 # shard read)
 
     @property
     def warm_loads(self) -> int:
@@ -198,15 +203,106 @@ class PartitionStore:
         # pinned base keys (refcounted): protected from LRU eviction while
         # a caller evaluates against them — the double-buffer guarantee
         self._pins: Dict[Any, int] = {}
+        # the ambient generation view (storage/deltas.py GenerationView),
+        # set per-thread by ``viewing(view)``: with a view active, cache
+        # keys become the view's bundle tokens (pid, generation, seq,
+        # geometry) and host misses stage through the view's delta-overlay
+        # loader instead of a plain shard read.  ``None`` (the default)
+        # is the pre-delta behaviour, bit-for-bit.
+        self._local = threading.local()
+        # device-committed owner tables per (generation, seq) — small LRU:
+        # one mutation epoch is one entry, and a handful of pinned
+        # generations can be in flight at once
+        self._owner_cache: "OrderedDict[Any, jax.Array]" = OrderedDict()
+
+    # -- generation views (streaming updates) ------------------------------
+
+    @property
+    def view(self):
+        """The thread's ambient GenerationView, or None (static graph)."""
+        return getattr(self._local, "view", None)
+
+    @contextlib.contextmanager
+    def viewing(self, view):
+        """``with store.viewing(snapshot): ...`` — every load inside the
+        block resolves against that pinned generation: cache keys carry
+        (generation, per-pid seq, geometry), so two generations of the
+        same pid coexist in both cache tiers without invalidation, and a
+        stale pid (pending deltas newer than its shard) stages through
+        the view's overlay loader.  ``view=None`` explicitly restores the
+        plain-pid behaviour for the block."""
+        prev = getattr(self._local, "view", None)
+        self._local.view = view
+        try:
+            yield self
+        finally:
+            self._local.view = prev
+
+    @property
+    def current_generation(self) -> Optional[int]:
+        """Generation the thread's loads resolve against (None: in-RAM
+        store with no backing — there is no generation to speak of)."""
+        v = self.view
+        if v is not None:
+            return int(v.generation)
+        return int(self.backing.generation) if self.backing is not None else None
+
+    def _vk(self, pid: int):
+        """The cache key one partition id resolves to under the ambient
+        view: the view's bundle token, or the plain pid (no view)."""
+        v = self.view
+        return int(pid) if v is None else v.bundle_token(int(pid))
+
+    def _vkey(self, key: StoreKey):
+        if isinstance(key, tuple):
+            return tuple(self._vk(p) for p in key)
+        return self._vk(key)
+
+    def _host_get(self, pid: int):
+        """Host-tier lookup for one pid under the ambient view."""
+        v = self.view
+        if v is None:
+            return self._host_tier.get(int(pid))
+        return self._host_tier.get(self._vk(pid), loader=self._overlay_loader(pid))
+
+    def _overlay_loader(self, pid: int):
+        """A host-miss loader bound to the ambient view: rebuilds the
+        bundle from the pinned generation (clean pids: a checksum-verified
+        shard read re-padded to view geometry; stale pids: the delta
+        overlay's rebuilt arrays)."""
+        v = self.view
+        pid = int(pid)
+
+        def load():
+            from ..storage.host_cache import HostBundle, bundle_nbytes
+            part, g2l = v.load_bundle(pid)
+            return HostBundle(part=part, g2l=g2l,
+                              nbytes=bundle_nbytes(part, g2l))
+        return load
 
     # -- global (non-partition) arrays ------------------------------------
 
     @property
     def owner(self) -> jax.Array:
-        """[V] owner table, device-committed once and shared by every run."""
-        if self._owner_dev is None:
-            self._owner_dev = jax.device_put(self.pg.owner)
-        return self._owner_dev
+        """[V] owner table, device-committed once and shared by every run.
+
+        Under an ambient view the table is the view's overlay assignment
+        (vertex adds/deletes move ownership between generations), cached
+        per (generation, seq) so pinned generations never recommit."""
+        v = self.view
+        if v is None:
+            if self._owner_dev is None:
+                self._owner_dev = jax.device_put(self.pg.owner)
+            return self._owner_dev
+        ok = (int(v.generation), int(v.seq))
+        got = self._owner_cache.get(ok)
+        if got is None:
+            got = jax.device_put(np.asarray(v.assignment))
+            self._owner_cache[ok] = got
+            while len(self._owner_cache) > 4:
+                self._owner_cache.popitem(last=False)
+        self._owner_cache.move_to_end(ok)
+        return got
 
     @property
     def part_keys(self):
@@ -258,15 +354,23 @@ class PartitionStore:
         on the disk read, defeating the overlap.  Returns True when work
         was actually issued (False: already resident / in flight)."""
         pid = int(pid)
-        if pid in self._cache:
+        vk = self._vk(pid)
+        if vk in self._cache:
             return False
-        if not self._host_tier.resident(pid):
-            return self._host_tier.read_ahead(pid)
+        if not self._host_tier.resident(vk):
+            v = self.view
+            if v is None:
+                return self._host_tier.read_ahead(pid)
+            issued = self._host_tier.read_ahead(
+                vk, loader=self._overlay_loader(pid))
+            if issued and pid in v.stale_pids:
+                self.stats.delta_overlays += 1
+            return issued
         entry = self._stage(pid, sharding=None)
         entry.prefetched = True
         self.stats.prefetch_issued += 1
         self.stats.bytes_prefetched += entry.nbytes
-        self._insert(entry)
+        self._insert(entry, cache_key=vk)
         return True
 
     # -- pinning (double-buffered streaming) --------------------------------
@@ -356,9 +460,11 @@ class PartitionStore:
         return [ck for ck, e in self._cache.items() if self._normkey(e.key) == nk]
 
     def _lookup(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
-        # a stacked entry staged under a different sharding must not be
-        # served for a differently-sharded request; fold it into the key
-        ck = (key, str(sharding)) if sharding is not None else key
+        # the ambient view folds (generation, seq, geometry) into the
+        # cache key; a stacked entry staged under a different sharding
+        # must not be served for a differently-sharded request either
+        vk = self._vkey(key)
+        ck = (vk, str(sharding)) if sharding is not None else vk
         got = self._cache.get(ck)
         if got is not None:
             self._cache.move_to_end(ck)
@@ -375,17 +481,26 @@ class PartitionStore:
 
     def _stage(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
         """Pull the host bundle through the host tier (a pinned-array
-        lookup, a host-LRU hit, or a disk shard read) and dispatch its
+        lookup, a host-LRU hit, or a disk shard read — under an ambient
+        view, the view's generation-pinned loader) and dispatch its
         device transfer (``device_put`` is asynchronous: it returns
         immediately with arrays whose data lands on the device in the
         background)."""
+        v = self.view
+        if v is not None:
+            # attribute overlay rebuilds on the calling thread, before the
+            # host get hides whether the loader actually ran
+            for p in (key if isinstance(key, tuple) else (key,)):
+                if int(p) in v.stale_pids \
+                        and not self._host_tier.resident(self._vk(p)):
+                    self.stats.delta_overlays += 1
         if isinstance(key, tuple):
-            bundles = [self._host_tier.get(p) for p in key]
+            bundles = [self._host_get(p) for p in key]
             host = {k: np.stack([b.part[k] for b in bundles])
                     for k in bundles[0].part.keys()}
             g2l = np.stack([np.asarray(b.g2l) for b in bundles])
         else:
-            bundle = self._host_tier.get(key)
+            bundle = self._host_get(key)
             host, g2l = bundle.part, np.asarray(bundle.g2l)
         nbytes = sum(np.asarray(v).nbytes for v in host.values()) + g2l.nbytes
         if sharding is not None:

@@ -100,6 +100,67 @@ def load_dataset(name: str, scale: float, seed: int):
     return g, load_queries(name, g, seed)
 
 
+def _mutation_soak(session, dqueries, oracle_graph, *, n_deltas: int,
+                   compact_every: int, seed: int, max_answers):
+    """The --mutate-workload serving loop: before each query, apply a
+    burst of random durable delta records (~45% edge inserts, ~45% edge
+    deletes, ~10% vertex add/tombstone), optionally folding hot
+    partitions into fresh shard generations every ``compact_every``
+    deltas; then serve one dataset query against the advanced view.
+    ``oracle_graph["g"]`` is re-pointed at the submit-time overlay
+    snapshot so --verify checks each answer against exactly the
+    generation it was pinned to.  Yields (query, result, budget)."""
+    from repro.storage.deltas import DELETED_LABEL
+    rng = np.random.default_rng(seed)
+    applied = 0
+    compacted_at = 0
+    qi = 0
+    while applied < n_deltas:
+        burst = int(min(rng.integers(1, 4), n_deltas - applied))
+        for _ in range(burst):
+            g = session.graph
+            del_id = g.node_vocab.get(DELETED_LABEL, -10)
+            alive = np.flatnonzero(np.asarray(g.node_label) != del_id)
+            roll = rng.random()
+            if roll < 0.45 and alive.size >= 2:
+                u, v = rng.choice(alive, size=2, replace=False)
+                if g.n_edges:
+                    lab = g.edge_vocab.str_of(int(np.asarray(g.edge_label)[
+                        int(rng.integers(0, g.n_edges))]))
+                else:
+                    lab = "soak"
+                session.add_edge(int(u), int(v), lab)
+            elif roll < 0.90 and g.n_edges:
+                i = int(rng.integers(0, g.n_edges))
+                session.del_edge(int(np.asarray(g.edge_src)[i]),
+                                 int(np.asarray(g.edge_dst)[i]),
+                                 g.edge_vocab.str_of(
+                                     int(np.asarray(g.edge_label)[i])))
+            elif roll < 0.95 and alive.size:
+                src = int(rng.choice(alive))
+                session.add_vertex(
+                    g.node_vocab.str_of(int(np.asarray(g.node_label)[src])),
+                    value=float(np.asarray(g.node_value)[src]))
+            elif alive.size:
+                session.del_vertex(int(rng.choice(alive)))
+            applied += 1
+        if compact_every and applied - compacted_at >= compact_every:
+            pids = session.compact_hot()
+            compacted_at = applied
+            print(f"[serve] compacted partitions {pids} at delta "
+                  f"{applied} -> generation {session.generation}")
+        dq = dqueries[qi % len(dqueries)]
+        qi += 1
+        # snapshot the overlay the submit will pin; the oracle must see
+        # the same vertices/edges the evaluator does
+        oracle_graph["g"] = session.graph
+        res = session.submit(dq, max_answers=max_answers)
+        yield dq, res, max_answers
+    print(f"[serve] soak done: {applied} deltas, generation "
+          f"{session.generation}, "
+          f"{int(session._mdir.pending_counts().sum())} pending")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="imdb", choices=["imdb", "synthetic"])
@@ -140,6 +201,21 @@ def main() -> None:
     ap.add_argument("--no-read-ahead", action="store_true",
                     help="with --graph-dir: disable the background-thread "
                          "disk read-ahead of the heuristic's runner-up")
+    ap.add_argument("--mutate-workload", type=int, default=0, metavar="N",
+                    help="with --graph-dir: mutation soak — interleave N "
+                         "random durable graph updates (edge/vertex "
+                         "insert+delete delta records, storage/deltas.py) "
+                         "with the dataset's queries; every query runs "
+                         "against its pinned generation view and --verify "
+                         "checks it against the whole-overlay oracle at "
+                         "that same snapshot")
+    ap.add_argument("--mutate-compact-every", type=int, default=0,
+                    metavar="M",
+                    help="with --mutate-workload: fold pending deltas into "
+                         "fresh shard generations (compact_hot) after "
+                         "every M applied deltas (0 = never compact)")
+    ap.add_argument("--mutate-seed", type=int, default=0,
+                    help="rng seed of the --mutate-workload update stream")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="check answers against the whole-graph oracle")
@@ -232,6 +308,11 @@ def main() -> None:
     else:
         graph, dqueries = load_dataset(args.dataset, args.scale, args.seed)
         print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} edges")
+    # --verify's oracle target: static modes check against the one graph,
+    # the mutation soak re-points this at each query's pinned overlay
+    # snapshot so every answer verifies against exactly the generation
+    # (+ pending deltas) it was served under
+    oracle_graph = {"g": graph}
 
     if args.emit_workload:
         if args.workload:
@@ -266,6 +347,7 @@ def main() -> None:
                                processors=args.processors,
                                prefetch=not args.no_prefetch,
                                seed=args.seed)
+    gen0 = session.generation   # None for in-RAM sessions
     q = partition_quality(graph, session.pg.assignment, session.k)
     print(f"[serve] session: k={session.k} scheme={session.scheme} "
           f"engine={args.engine} cut={q['cut']} ({q['cut_frac']:.1%}) "
@@ -372,6 +454,18 @@ def main() -> None:
             "fairness_gamma": args.fairness_gamma,
         }
         served = zip(wqueries, report.results, budgets)
+    elif args.mutate_workload:
+        if not args.graph_dir:
+            sys.exit("[serve] --mutate-workload needs --graph-dir (durable "
+                     "delta logs live in the graph directory)")
+        print(f"[serve] mutation soak: {args.mutate_workload} deltas "
+              f"(seed {args.mutate_seed}), compact every "
+              f"{args.mutate_compact_every or 'never'}")
+        served = _mutation_soak(session, dqueries, oracle_graph,
+                                n_deltas=args.mutate_workload,
+                                compact_every=args.mutate_compact_every,
+                                seed=args.mutate_seed,
+                                max_answers=args.max_answers)
     else:
         served = ((dq, session.submit(dq, max_answers=args.max_answers),
                    args.max_answers) for dq in dqueries)
@@ -427,12 +521,14 @@ def main() -> None:
                "cold_loads": ls.cold_loads, "warm_loads": ls.warm_loads,
                "prefetch_hits": ls.prefetch_hits,
                "disk_reads": ls.disk_reads,
-               "read_ahead_hits": ls.read_ahead_hits}
+               "read_ahead_hits": ls.read_ahead_hits,
+               "generation": res.generation}
         if slo_report is not None:
             rec.update(next(slo_extras))
         if args.verify:
             from repro.core.oracle import match_disjunctive
-            ref = match_disjunctive(graph, dq, q_pad=answers.shape[1])
+            ref = match_disjunctive(oracle_graph["g"], dq,
+                                    q_pad=answers.shape[1])
             if budget is None:
                 match = (answers.shape[0] == ref.shape[0]
                          and (answers.shape[0] == 0
@@ -497,6 +593,14 @@ def main() -> None:
             rep = {"queries": records,
                    "cache": cache,
                    "workload_profile": profile}
+            if session.mutable:
+                rep["generations"] = {
+                    "start": gen0,
+                    "end": session.generation,
+                    "compactions": session._mdir.compactions,
+                    "pending_deltas": int(
+                        session._mdir.pending_counts().sum()),
+                }
             if throughput is not None:
                 rep["throughput"] = throughput
             with open(args.json, "w") as f:

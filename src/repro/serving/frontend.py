@@ -454,37 +454,42 @@ class ServingFrontend:
                     finished_round=rounds, result=res)
 
         drained_deferred: List[_Pending] = []
-        while (next_arrival < len(order) or in_flight or deferred):
-            # 1) admit every due arrival (instant replay: all of them);
-            # next_arrival advances BEFORE consider() so the deferral
-            # check reads only strictly-future arrivals
-            while next_arrival < len(order):
-                idx = order[next_arrival]
-                if requests[idx].arrival_s <= vnow():
-                    next_arrival += 1
-                    consider(idx)
-                elif not in_flight and not deferred:
-                    # idle: sleep the replay clock forward to the arrival
-                    time.sleep(min(0.05, max(
-                        0.0, (requests[idx].arrival_s - vnow()) / speed)))
-                else:
-                    break
-            # 2) drain phase: nothing due and nothing active -> admit the
-            # parked exhaustive work (arrival order)
-            if not in_flight and next_arrival >= len(order) and deferred:
-                for p in deferred:
-                    drained_deferred.append(p)
-                    admit(p)
-                deferred.clear()
-            if not in_flight:
-                if speed > 0 and next_arrival < len(order):
-                    time.sleep(0.001)   # deferred work parked; next due soon
-                continue
-            # 3) one bounded scheduler pump with fresh urgencies
-            refresh_urgency()
-            report = sched.run(max_rounds=1)
-            rounds += 1
-            drain_completions(report)
+        try:
+            while (next_arrival < len(order) or in_flight or deferred):
+                # 1) admit every due arrival (instant replay: all of them);
+                # next_arrival advances BEFORE consider() so the deferral
+                # check reads only strictly-future arrivals
+                while next_arrival < len(order):
+                    idx = order[next_arrival]
+                    if requests[idx].arrival_s <= vnow():
+                        next_arrival += 1
+                        consider(idx)
+                    elif not in_flight and not deferred:
+                        # idle: sleep the replay clock forward to the arrival
+                        time.sleep(min(0.05, max(
+                            0.0, (requests[idx].arrival_s - vnow()) / speed)))
+                    else:
+                        break
+                # 2) drain phase: nothing due and nothing active -> admit the
+                # parked exhaustive work (arrival order)
+                if not in_flight and next_arrival >= len(order) and deferred:
+                    for p in deferred:
+                        drained_deferred.append(p)
+                        admit(p)
+                    deferred.clear()
+                if not in_flight:
+                    if speed > 0 and next_arrival < len(order):
+                        time.sleep(0.001)  # deferred work parked; due soon
+                    continue
+                # 3) one bounded scheduler pump with fresh urgencies
+                refresh_urgency()
+                report = sched.run(max_rounds=1)
+                rounds += 1
+                drain_completions(report)
+        finally:
+            # the whole serve run was pinned to one generation view; let
+            # a later compaction's GC reclaim it once superseded
+            sched.close()
 
         latencies: Dict[str, List[float]] = {}
         deadline_met: Dict[str, List[bool]] = {}

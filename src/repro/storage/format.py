@@ -51,7 +51,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -61,6 +61,23 @@ FORMAT_VERSION = 1
 FORMAT_KIND = "pgqp-graph-dir"
 MANIFEST_NAME = "manifest.json"
 GRAPH_NAME = "graph.npz"
+
+# ---------------------------------------------------------------------------
+# Fault injection (tests/fault_injection.py): every durable filesystem step
+# in this module (and storage/deltas.py, which writes through the same
+# helpers) announces itself here BEFORE executing.  A test installs a hook
+# that raises at step N to simulate a crash at that exact point; production
+# leaves it None at zero cost.  Because every final file lands via atomic
+# rename, "crash before step N" enumerates every observable intermediate
+# on-disk state.
+# ---------------------------------------------------------------------------
+
+fault_hook: Optional[Callable[[str, str], None]] = None
+
+
+def _fault_point(step: str, path: str) -> None:
+    if fault_hook is not None:
+        fault_hook(step, path)
 
 
 class StorageFormatError(RuntimeError):
@@ -90,9 +107,29 @@ def _atomic_savez(path: str, arrs: Dict[str, np.ndarray]) -> None:
     mistaken for a shard (np.savez appends '.npz' to bare names, hence
     the explicit file handle)."""
     tmp = path + ".tmp"
+    _fault_point("write", path)
     with open(tmp, "wb") as f:
         np.savez(f, **arrs)
+    _fault_point("rename", path)
     os.replace(tmp, path)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    """Text twin of ``_atomic_savez`` (manifests and delta logs)."""
+    tmp = path + ".tmp"
+    _fault_point("write", path)
+    with open(tmp, "w") as f:
+        f.write(text)
+    _fault_point("rename", path)
+    os.replace(tmp, path)
+
+
+def graph_file_name(checksums: Dict[str, str]) -> str:
+    """Whole-graph files are content-addressed like shards, so a re-save
+    never overwrites the file the live manifest points at — the legacy
+    fixed name ``graph.npz`` is still read (old directories) but never
+    written by this build."""
+    return f"graph-{_content_key(checksums)}.npz"
 
 
 def array_checksum(a: np.ndarray) -> str:
@@ -114,6 +151,39 @@ def _shard_arrays(pg: PartitionedGraph, pid: int) -> Dict[str, np.ndarray]:
     return arrs
 
 
+def _pad_axis(a: np.ndarray, n: int, fill, axis: int = 0) -> np.ndarray:
+    if a.shape[axis] >= n:
+        return a
+    shape = list(a.shape)
+    shape[axis] = n - a.shape[axis]
+    pad = np.full(shape, fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=axis)
+
+
+def pad_bundle(arrs: Dict[str, np.ndarray], node_pad: int, ell_width: int,
+               n_nodes: int) -> Dict[str, np.ndarray]:
+    """Grow a shard bundle to a target geometry with semantically inert
+    padding (same fill values as core/graph.build_partitions): padded
+    node rows have ``node_gid == -1`` and padded ELLPACK cells have
+    ``ell_dst == -1``, which every evaluator predicate already gates on.
+    The g2l row extends to the target vertex count with -1 (no new gid
+    is ever local to a partition it doesn't touch).  Compaction publishes
+    grown geometry in the manifest without rewriting untouched shards
+    (storage/deltas.py), so a shard may be stored smaller than the
+    manifest geometry — this pads it back to uniform at read time."""
+    out = dict(arrs)
+    out["node_gid"] = _pad_axis(arrs["node_gid"], node_pad, -1)
+    out["node_label"] = _pad_axis(arrs["node_label"], node_pad, -2)
+    out["node_value"] = _pad_axis(arrs["node_value"], node_pad, np.nan)
+    for k, fill in (("ell_dst", -1), ("ell_label", -2), ("ell_dir", 0),
+                    ("ell_dlab", -2), ("ell_dval", np.nan),
+                    ("ell_dgid", -1)):
+        a = _pad_axis(arrs[k], ell_width, fill, axis=1)
+        out[k] = _pad_axis(a, node_pad, fill, axis=0)
+    out["g2l"] = _pad_axis(arrs["g2l"], n_nodes, -1)
+    return out
+
+
 def _label_histogram(node_label: np.ndarray) -> List[List[int]]:
     """Sparse [label_id, count] pairs over a partition's core nodes — the
     manifest-level SNI input (start-node counts per label)."""
@@ -121,7 +191,12 @@ def _label_histogram(node_label: np.ndarray) -> List[List[int]]:
     return [[int(l), int(c)] for l, c in zip(labels, counts) if l >= 0]
 
 
-def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
+def save_partitioned_graph(pg: PartitionedGraph, path: str, *,
+                           generation: Optional[int] = None,
+                           applied_seq: Optional[int] = None,
+                           shard_seq: Optional[List[int]] = None,
+                           keep_files: Optional[set] = None
+                           ) -> Dict[str, Any]:
     """Write ``pg`` as a graph directory; returns the manifest dict.
 
     Works for both in-RAM graphs (shards serialized from ``pg.parts``)
@@ -129,11 +204,34 @@ def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
     backing catalog — never more than one partition's bytes in flight).
     The manifest is written last, so the directory only becomes openable
     once every shard it names is on disk.
+
+    Generations: every manifest carries a monotone ``generation`` number
+    (default: one past the directory's current manifest, 0 for a fresh
+    directory) plus the delta-log watermark ``applied_seq`` / per-pid
+    ``shard_seq`` (storage/deltas.py).  ``keep_files`` names extra
+    content-addressed files the post-publish GC must leave alone (shards
+    and graph files still referenced by pinned generations).
     """
     assert pg.node_pad > 0, "uniform padding required (build_partitions default)"
     os.makedirs(path, exist_ok=True)
     backing: Optional[DiskCatalog] = getattr(pg, "backing", None)
     g = pg.graph
+    prev_gen = -1
+    prev_seq = 0
+    if os.path.exists(os.path.join(path, MANIFEST_NAME)):
+        try:
+            with open(os.path.join(path, MANIFEST_NAME)) as f:
+                prev = json.load(f)
+            prev_gen = int(prev.get("generation", 0))
+            prev_seq = int(prev.get("applied_seq", 0))
+        except (OSError, ValueError):
+            pass
+    if generation is None:
+        generation = prev_gen + 1
+    if applied_seq is None:
+        applied_seq = prev_seq
+    if shard_seq is None:
+        shard_seq = [int(applied_seq)] * pg.k
 
     parts_meta: List[Dict[str, Any]] = []
     part_keys: Optional[List[str]] = None
@@ -146,7 +244,8 @@ def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
             arrs = _shard_arrays(pg, pid)
         checksums = {k: array_checksum(v) for k, v in arrs.items()}
         fname = shard_name(pid, _content_key(checksums))
-        _atomic_savez(os.path.join(path, fname), arrs)
+        if not os.path.exists(os.path.join(path, fname)):
+            _atomic_savez(os.path.join(path, fname), arrs)
         core_mask = pg.assignment == pid
         parts_meta.append({
             "pid": pid,
@@ -168,17 +267,31 @@ def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
     for meta in parts_meta:
         meta["components"] = int(ccs[meta["pid"]])
 
-    np.savez(os.path.join(path, GRAPH_NAME),
-             node_label=g.node_label, node_value=g.node_value,
-             edge_src=g.edge_src, edge_dst=g.edge_dst,
-             edge_label=g.edge_label, edge_directed=g.edge_directed,
-             assignment=pg.assignment.astype(np.int32))
+    garrs = dict(node_label=np.asarray(g.node_label),
+                 node_value=np.asarray(g.node_value),
+                 edge_src=np.asarray(g.edge_src),
+                 edge_dst=np.asarray(g.edge_dst),
+                 edge_label=np.asarray(g.edge_label),
+                 edge_directed=np.asarray(g.edge_directed),
+                 assignment=pg.assignment.astype(np.int32))
+    graph_checksums = {k: array_checksum(v) for k, v in garrs.items()}
+    graph_file = graph_file_name(graph_checksums)
+    # content-addressed: the old manifest's graph file is never overwritten
+    # (a crash between here and the manifest rename leaves the previous
+    # generation's pairing of manifest + graph arrays fully intact)
+    if not os.path.exists(os.path.join(path, graph_file)):
+        _atomic_savez(os.path.join(path, graph_file), garrs)
 
     manifest = {
         "kind": FORMAT_KIND,
         "format_version": FORMAT_VERSION,
         "scheme": pg.scheme,
         "k": pg.k,
+        "generation": int(generation),
+        "applied_seq": int(applied_seq),
+        "shard_seq": [int(s) for s in shard_seq],
+        "graph_file": graph_file,
+        "graph_checksums": graph_checksums,
         "node_pad": int(pg.node_pad),
         "edge_pad": int(pg.edge_pad),
         "ell_width": int(pg.ell_width),
@@ -190,18 +303,37 @@ def save_partitioned_graph(pg: PartitionedGraph, path: str) -> Dict[str, Any]:
         "edge_vocab": [g.edge_vocab.str_of(i) for i in range(len(g.edge_vocab))],
         "partitions": parts_meta,
     }
-    tmp = os.path.join(path, MANIFEST_NAME + ".tmp")
-    with open(tmp, "w") as f:
-        json.dump(manifest, f, indent=2)
-    os.replace(tmp, os.path.join(path, MANIFEST_NAME))
-    # the manifest is live: garbage-collect shards of older generations
-    # (content-addressed names mean they were never touched by this save)
-    live = {m["shard"] for m in parts_meta}
-    for fname in os.listdir(path):
-        if fname.startswith("part-") and fname.endswith(".npz") \
-                and fname not in live:
-            os.remove(os.path.join(path, fname))
+    write_manifest(path, manifest)
+    # the manifest is live: garbage-collect content-addressed files no
+    # manifest or pinned generation references any more
+    live = {m["shard"] for m in parts_meta} | {graph_file}
+    if keep_files:
+        live |= set(keep_files)
+    gc_directory(path, live)
     return manifest
+
+
+def write_manifest(path: str, manifest: Dict[str, Any]) -> None:
+    """Atomically publish ``manifest`` — THE commit point of every save
+    and compaction.  Callers must have every file it names durable first."""
+    _atomic_write_text(os.path.join(path, MANIFEST_NAME),
+                       json.dumps(manifest, indent=2))
+
+
+def gc_directory(path: str, keep: set) -> int:
+    """Remove content-addressed files (``part-*.npz`` / ``graph-*.npz``)
+    not in ``keep``.  Never touches the manifest, delta logs, or the
+    legacy fixed-name ``graph.npz``.  Returns the number removed."""
+    removed = 0
+    for fname in sorted(os.listdir(path)):
+        if fname in keep or fname == GRAPH_NAME:
+            continue
+        if (fname.startswith("part-") or fname.startswith("graph-")) \
+                and fname.endswith(".npz"):
+            _fault_point("unlink", os.path.join(path, fname))
+            os.remove(os.path.join(path, fname))
+            removed += 1
+    return removed
 
 
 class DiskCatalog:
@@ -253,6 +385,29 @@ class DiskCatalog:
     def part_keys(self) -> List[str]:
         return list(self.manifest["part_keys"])
 
+    @property
+    def generation(self) -> int:
+        """The manifest's publish generation (0 for pre-delta directories)."""
+        return int(self.manifest.get("generation", 0))
+
+    @property
+    def applied_seq(self) -> int:
+        """Delta records with seq <= this are already folded into the
+        manifest's graph file and shards (storage/deltas.py)."""
+        return int(self.manifest.get("applied_seq", 0))
+
+    def shard_seq(self, pid: int) -> int:
+        """Per-partition fold watermark: records with seq <= this are
+        baked into partition ``pid``'s shard file."""
+        seqs = self.manifest.get("shard_seq")
+        if seqs is None:
+            return self.applied_seq
+        return int(seqs[int(pid)])
+
+    @property
+    def graph_file(self) -> str:
+        return self.manifest.get("graph_file", GRAPH_NAME)
+
     def part_meta(self, pid: int) -> Dict[str, Any]:
         return self._parts[int(pid)]
 
@@ -270,8 +425,17 @@ class DiskCatalog:
 
     def _globals(self) -> Dict[str, np.ndarray]:
         if self._global is None:
-            with np.load(os.path.join(self.path, GRAPH_NAME)) as z:
-                self._global = {k: z[k] for k in z.files}
+            with np.load(os.path.join(self.path, self.graph_file)) as z:
+                arrs = {k: z[k] for k in z.files}
+            want = self.manifest.get("graph_checksums")
+            if self.verify_checksums and want:
+                for k, a in arrs.items():
+                    if array_checksum(a) != want.get(k):
+                        raise StorageFormatError(
+                            f"checksum mismatch on graph array {k!r} "
+                            f"({self.graph_file}): file is corrupt or "
+                            f"belongs to a different generation")
+            self._global = arrs
         return self._global
 
     @property
@@ -330,7 +494,10 @@ class DiskCatalog:
 
     def read_part(self, pid: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """One shard off disk: (evaluator input dict, g2l row), checksum
-        verified against the manifest when ``verify_checksums``."""
+        verified against the manifest when ``verify_checksums``.  Arrays
+        are padded up to the manifest geometry after verification, so a
+        directory whose compactions grew the padding still serves every
+        shard at one uniform shape."""
         pid = int(pid)
         with np.load(self.shard_path(pid)) as z:
             arrs = {k: z[k] for k in z.files}
@@ -343,6 +510,9 @@ class DiskCatalog:
                         f"checksum mismatch on partition {pid} array "
                         f"{k!r} ({self.shard_path(pid)}): shard is "
                         f"corrupt or was written by a different layout")
+        arrs = pad_bundle(arrs, int(self.manifest["node_pad"]),
+                          int(self.manifest["ell_width"]),
+                          int(self.manifest["n_nodes"]))
         g2l = arrs.pop("g2l")
         return arrs, g2l
 

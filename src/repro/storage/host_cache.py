@@ -118,82 +118,100 @@ class HostShardCache:
     def part_keys(self):
         return self.catalog.part_keys
 
-    def resident(self, pid: int) -> bool:
+    @staticmethod
+    def _norm(key):
+        """Cache keys are ints (plain pid, pre-delta behaviour) or the
+        store's bundle tokens ``(pid, generation, seq, geometry...)`` —
+        anything hashable whose first element identifies the pid."""
+        return int(key) if isinstance(key, (int, np.integer)) else key
+
+    @staticmethod
+    def _pid_of(key) -> int:
+        return int(key if isinstance(key, (int, np.integer)) else key[0])
+
+    def resident(self, key) -> bool:
         """Host-resident NOW — an in-flight read-ahead does not count
         (the store must not try to device-stage a pid whose bytes are
         still on their way: its host get would block on the worker)."""
         with self._lock:
-            return int(pid) in self._cache
+            return self._norm(key) in self._cache
 
-    def nbytes(self, pid: int) -> int:
-        return self.catalog.part_nbytes(pid)
+    def nbytes(self, key) -> int:
+        return self.catalog.part_nbytes(self._pid_of(key))
 
-    def get(self, pid: int) -> HostBundle:
-        pid = int(pid)
+    def _default_loader(self, key):
+        def load() -> HostBundle:
+            part, g2l = self.catalog.read_part(self._pid_of(key))
+            return HostBundle(part=part, g2l=g2l,
+                              nbytes=bundle_nbytes(part, g2l))
+        return load
+
+    def get(self, key, loader=None) -> HostBundle:
+        """``loader`` builds the bundle on a miss (default: a plain
+        checksum-verified shard read); a delta-aware caller passes the
+        generation view's overlay loader with its token as ``key``."""
+        key = self._norm(key)
         with self._lock:
-            worker = self._pending.get(pid)
+            worker = self._pending.get(key)
         if worker is not None:
             worker.join()   # the worker inserts into the cache itself
         with self._lock:
-            err = self._errors.pop(pid, None)
+            err = self._errors.pop(key, None)
             if err is not None:
                 raise err   # e.g. StorageFormatError from a corrupt shard
-            got = self._cache.get(pid)
+            got = self._cache.get(key)
             if got is not None:
-                self._cache.move_to_end(pid)
-                if pid in self._prefetched:
-                    self._prefetched.discard(pid)
+                self._cache.move_to_end(key)
+                if key in self._prefetched:
+                    self._prefetched.discard(key)
                     self.stats.read_ahead_hits += 1
                 return got
         # demand read: disk on the critical path
         self.stats.disk_reads += 1
-        part, g2l = self.catalog.read_part(pid)
-        bundle = HostBundle(part=part, g2l=g2l,
-                            nbytes=bundle_nbytes(part, g2l))
+        bundle = (loader or self._default_loader(key))()
         self.stats.bytes_disk += bundle.nbytes
         with self._lock:
-            self._insert(pid, bundle)
+            self._insert(key, bundle)
         return bundle
 
-    def read_ahead(self, pid: int) -> bool:
-        """Start pulling ``pid`` off disk on a background thread; returns
+    def read_ahead(self, key, loader=None) -> bool:
+        """Start pulling ``key`` off disk on a background thread; returns
         True when a read was actually issued (False: resident, already in
         flight, or read-ahead disabled).  The worker lands its bundle in
         the LRU itself (under the host budget, evicting as needed) and
         removes itself from the pending set, so a read-ahead nobody ever
         ``get``s is still capacity-bounded and thread-clean; a worker
         failure (corrupt shard, IO error) is re-raised by the next
-        ``get(pid)`` instead of being swallowed."""
-        pid = int(pid)
+        ``get(key)`` instead of being swallowed."""
+        key = self._norm(key)
         if not self.read_ahead_enabled:
             return False
         with self._lock:
-            if pid in self._cache or pid in self._pending:
+            if key in self._cache or key in self._pending:
                 return False
         # counters on the calling thread (see module docstring); nbytes
         # comes from the manifest, so no shard I/O happens here
         self.stats.disk_reads += 1
         self.stats.read_ahead_issued += 1
-        self.stats.bytes_disk += self.nbytes(pid)
+        self.stats.bytes_disk += self.nbytes(key)
+        load = loader or self._default_loader(key)
 
         def _work() -> None:
             try:
-                part, g2l = self.catalog.read_part(pid)
-                bundle = HostBundle(part=part, g2l=g2l,
-                                    nbytes=bundle_nbytes(part, g2l))
+                bundle = load()
                 with self._lock:
-                    self._pending.pop(pid, None)
-                    self._insert(pid, bundle)
-                    self._prefetched.add(pid)
-            except BaseException as e:   # surfaced by the next get(pid)
+                    self._pending.pop(key, None)
+                    self._insert(key, bundle)
+                    self._prefetched.add(key)
+            except BaseException as e:   # surfaced by the next get(key)
                 with self._lock:
-                    self._pending.pop(pid, None)
-                    self._errors[pid] = e
+                    self._pending.pop(key, None)
+                    self._errors[key] = e
 
         t = threading.Thread(target=_work, daemon=True,
-                             name=f"read-ahead-part-{pid}")
+                             name=f"read-ahead-part-{self._pid_of(key)}")
         with self._lock:
-            self._pending[pid] = t
+            self._pending[key] = t
         t.start()
         return True
 

@@ -1,0 +1,89 @@
+"""Filesystem crash-injection harness for the storage layer.
+
+``storage/format.py`` calls ``_fault_point(step, path)`` immediately
+BEFORE every durable filesystem operation it performs — tmp-file writes
+(``"write"``), atomic publishes (``"rename"``), and GC/trim removals
+(``"unlink"``).  Because every publish in the format is an atomic
+``os.replace`` and every write goes to a tmp name first, the set of
+states a real crash can leave behind is exactly the set of prefixes of
+that operation sequence — so raising at the i-th fault point simulates
+"the process died right before durable op i" for every i, exhaustively.
+
+Usage (see tests/test_fault_injection.py):
+
+    inj = FaultInjector()                 # counting mode
+    with inj.installed():
+        scenario()                        # runs to completion
+    n = inj.count                         # durable ops the scenario does
+
+    inj = FaultInjector(crash_at=i)       # crash mode
+    with inj.installed(), pytest.raises(InjectedCrash):
+        scenario()                        # dies right before op i
+    # ...assert the directory still serves the last published state
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Tuple
+
+from repro.storage import format as storage_format
+
+
+class InjectedCrash(BaseException):
+    """Raised at the chosen fault point.  Deliberately NOT an Exception:
+    production code that swallowed ``except Exception`` around a durable
+    write would hide exactly the crash states this harness exists to
+    reach."""
+
+    def __init__(self, step: str, path: str, index: int):
+        super().__init__(f"injected crash before durable op #{index} "
+                         f"({step} {path})")
+        self.step = step
+        self.path = path
+        self.index = index
+
+
+class FaultInjector:
+    """Counts durable filesystem ops, optionally crashing at one of them.
+
+    ``crash_at=None`` is the dry-run counting mode: the scenario runs to
+    completion and ``count`` reports how many fault points it passed —
+    the sweep bound for the crash mode.  With ``crash_at=i`` the i-th
+    fault point (0-based) raises ``InjectedCrash`` instead of returning,
+    leaving the filesystem in the exact state a kill -9 would at that
+    instant.  ``ops`` records every (step, path) seen either way, so a
+    failing sweep iteration can report WHICH operation it died before.
+    """
+
+    def __init__(self, crash_at: Optional[int] = None):
+        self.crash_at = crash_at
+        self.count = 0
+        self.ops: List[Tuple[str, str]] = []
+
+    def __call__(self, step: str, path: str) -> None:
+        index = self.count
+        self.count += 1
+        self.ops.append((step, path))
+        if self.crash_at is not None and index == self.crash_at:
+            raise InjectedCrash(step, path, index)
+
+    @contextlib.contextmanager
+    def installed(self):
+        """Install as the storage layer's fault hook for the block.  Not
+        reentrant; the previous hook (normally None) is restored even
+        when the scenario dies mid-flight."""
+        prev = storage_format.fault_hook
+        storage_format.fault_hook = self
+        try:
+            yield self
+        finally:
+            storage_format.fault_hook = prev
+
+
+def crash_points(scenario) -> int:
+    """Dry-run ``scenario()`` once under a counting injector and return
+    how many durable ops (= crash points) it performs."""
+    inj = FaultInjector()
+    with inj.installed():
+        scenario()
+    return inj.count

@@ -1,0 +1,442 @@
+"""Streaming graph updates: interleaving equivalence, generation-pinned
+serving under concurrent compaction, and generation observability.
+
+ISSUE 8 acceptance covered here:
+  * >= 100 seeded random interleavings of insert/delete/compact recover
+    to exactly the state an independent python mirror predicts, survive
+    a reopen after ``compact_all``, and round-trip through a from-scratch
+    save of the same final edge set (gid-identical canonical forms);
+  * answers on the final generation are identical across OPAT,
+    TraditionalMP, the scheduler batch (k=3) and MapReduceMP (k=1,
+    single device) to a from-scratch save of the same final graph,
+    oracle-verified;
+  * queries pinned to generation G keep returning G-consistent answers
+    while a compaction publishes G+1 mid-run; fresh opens see G+1; the
+    superseded generation's files are GC'd only once no pin remains;
+  * ``QueryResult``/``RunStats`` carry ``generation`` and
+    ``workload_profile()`` reports per-partition delta counts.
+"""
+import math
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GraphSession, build_partitions,
+                        match_disjunctive, partition_graph)
+from repro.core.graph import Graph, LabelVocab
+from repro.data.generators import subgen_like_graph, subgen_queries
+from repro.storage import DiskCatalog, save_partitioned_graph
+from repro.storage.deltas import DELETED_LABEL, open_mutable
+
+N_INTERLEAVINGS = 100
+OPS_PER_SEED = 8
+
+
+# ---------------------------------------------------------------------------
+# an independent python mirror of the mutation semantics
+# ---------------------------------------------------------------------------
+
+class Mirror:
+    """Plain-python model of the delta semantics, sharing NO code with
+    storage/deltas.py: nodes are (label, value) slots (tombstoned in
+    place), edges a list of (u, v, label, directed).  ``edge_del``
+    removes every (u, v, label) copy; ``vertex_del`` tombstones the slot
+    and drops every incident edge."""
+
+    def __init__(self, g):
+        node_label = np.asarray(g.node_label)
+        node_value = np.asarray(g.node_value)
+        self.nodes = [(g.node_vocab.str_of(int(node_label[i])),
+                       float(node_value[i]))
+                      for i in range(int(g.n_nodes))]
+        self.edges = [(int(u), int(v), g.edge_vocab.str_of(int(lab)),
+                       bool(d))
+                      for u, v, lab, d in zip(
+                          np.asarray(g.edge_src), np.asarray(g.edge_dst),
+                          np.asarray(g.edge_label),
+                          np.asarray(g.edge_directed))]
+        self.value_dtype = node_value.dtype
+
+    def alive(self):
+        return [i for i, (lab, _) in enumerate(self.nodes)
+                if lab != DELETED_LABEL]
+
+    def apply(self, op):
+        if op["op"] == "edge_add":
+            self.edges.append((op["u"], op["v"], op["label"],
+                               bool(op.get("directed", False))))
+        elif op["op"] == "edge_del":
+            self.edges = [e for e in self.edges
+                          if not (e[0] == op["u"] and e[1] == op["v"]
+                                  and e[2] == op["label"])]
+        elif op["op"] == "vertex_add":
+            # the storage path casts the record's float64 value to the
+            # graph's node_value dtype at apply time — mirror that
+            self.nodes.append((op["label"],
+                               float(np.asarray(op["value"],
+                                                self.value_dtype))))
+        elif op["op"] == "vertex_del":
+            gid = op["u"]
+            self.nodes[gid] = (DELETED_LABEL, math.nan)
+            self.edges = [e for e in self.edges
+                          if e[0] != gid and e[1] != gid]
+        else:
+            raise AssertionError(op)
+
+    def canon(self):
+        nodes = tuple((i, lab, None if math.isnan(val) else val)
+                      for i, (lab, val) in enumerate(self.nodes))
+        return nodes, tuple(sorted(self.edges))
+
+    def to_graph(self):
+        """A from-scratch ``Graph`` of the final state (gid-identical,
+        including tombstones)."""
+        nv, ev = LabelVocab(), LabelVocab()
+        node_label = np.asarray([nv.intern(lab) for lab, _ in self.nodes],
+                                np.int32)
+        node_value = np.asarray([val for _, val in self.nodes],
+                                self.value_dtype)
+        g = Graph(n_nodes=len(self.nodes),
+                  node_label=node_label, node_value=node_value,
+                  edge_src=np.asarray([e[0] for e in self.edges], np.int32),
+                  edge_dst=np.asarray([e[1] for e in self.edges], np.int32),
+                  edge_label=np.asarray([ev.intern(e[2])
+                                         for e in self.edges], np.int32),
+                  edge_directed=np.asarray([e[3] for e in self.edges], bool),
+                  node_vocab=nv, edge_vocab=ev)
+        g.validate()
+        return g
+
+
+def graph_canon(g):
+    node_label = np.asarray(g.node_label)
+    node_value = np.asarray(g.node_value)
+    nodes = []
+    for i in range(int(g.n_nodes)):
+        val = float(node_value[i])
+        nodes.append((i, g.node_vocab.str_of(int(node_label[i])),
+                      None if math.isnan(val) else val))
+    edges = sorted(
+        (int(u), int(v), g.edge_vocab.str_of(int(lab)), bool(d))
+        for u, v, lab, d in zip(np.asarray(g.edge_src),
+                                np.asarray(g.edge_dst),
+                                np.asarray(g.edge_label),
+                                np.asarray(g.edge_directed)))
+    return tuple(nodes), tuple(edges)
+
+
+def random_ops(rng, mirror, k, n_ops):
+    """One interleaving: ops valid against the mirror's running state
+    (mutation entry points reject dead endpoints, so the generator only
+    proposes what a real writer could)."""
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        alive = mirror.alive()
+        if roll < 0.40 and len(alive) >= 2:
+            u, v = rng.choice(alive, size=2, replace=False)
+            op = {"op": "edge_add", "u": int(u), "v": int(v),
+                  "label": str(rng.choice(["E_m0", "E_m1"])),
+                  "directed": bool(rng.random() < 0.3)}
+        elif roll < 0.65 and mirror.edges:
+            u, v, lab, _ = mirror.edges[int(rng.integers(len(mirror.edges)))]
+            op = {"op": "edge_del", "u": u, "v": v, "label": lab}
+        elif roll < 0.85:
+            op = {"op": "vertex_add", "label": str(rng.choice(["L_m0",
+                                                               "L_m1"])),
+                  "value": float(rng.integers(0, 8)) / 8.0,
+                  "pid": int(rng.integers(k))}
+        elif alive:
+            op = {"op": "vertex_del", "u": int(rng.choice(alive))}
+        else:
+            continue
+        mirror.apply(op)
+        ops.append(op)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    g = subgen_like_graph(n_nodes=80, n_edges=220, n_embed=6, seed=7)
+    assign = partition_graph(g, 3, "kway_shem")
+    pg = build_partitions(g, assign, 3, scheme="kway_shem")
+    base = str(tmp_path_factory.mktemp("mut-base"))
+    save_partitioned_graph(pg, base)
+    dqueries = subgen_queries(g)[:2]
+    return g, base, dqueries
+
+
+# ---------------------------------------------------------------------------
+# (1) >= 100 seeded interleavings vs the mirror
+# ---------------------------------------------------------------------------
+
+def test_interleaving_rebuild_equivalence_100_seeds(setup, tmp_path):
+    g, base, _ = setup
+    for seed in range(N_INTERLEAVINGS):
+        rng = np.random.default_rng(1000 + seed)
+        work = str(tmp_path / f"il-{seed:03d}")
+        shutil.copytree(base, work)
+        mdir = open_mutable(work)
+        mirror = Mirror(g)
+        applied = 0
+        for op in random_ops(rng, mirror, mdir.k, OPS_PER_SEED):
+            mdir.apply_op(op)
+            applied += 1
+            # interleave compactions INTO the op stream
+            if rng.random() < 0.15:
+                mdir.compact(int(rng.integers(mdir.k)))
+        view = mdir.snapshot()
+        try:
+            assert graph_canon(view.graph) == mirror.canon(), seed
+        finally:
+            view.release()
+        # fold everything; a fresh open must land on the same state
+        if rng.random() < 0.5:
+            mdir.compact_all()
+        else:
+            mdir.compact(0)
+        re_mdir = open_mutable(work)
+        view = re_mdir.snapshot()
+        try:
+            assert graph_canon(view.graph) == mirror.canon(), seed
+            assignment = np.asarray(view.assignment, np.int64)
+        finally:
+            view.release()
+        # from-scratch save of the same final edge set round-trips to the
+        # identical canonical graph (gids, tombstones and all)
+        fresh = mirror.to_graph()
+        assert graph_canon(fresh) == mirror.canon(), seed
+        fresh_dir = str(tmp_path / f"il-{seed:03d}-fresh")
+        save_partitioned_graph(
+            build_partitions(fresh, assignment, 3, scheme="kway_shem"),
+            fresh_dir)
+        assert graph_canon(DiskCatalog(fresh_dir).load_graph()) == \
+            mirror.canon(), seed
+        shutil.rmtree(work)
+        shutil.rmtree(fresh_dir)
+
+
+# ---------------------------------------------------------------------------
+# (2) final-generation engine equivalence
+# ---------------------------------------------------------------------------
+
+def _apply_ops(mdir, ops):
+    """Replay one shared op stream onto a directory (vertex placement
+    clamped to its k — placement changes the layout, never the graph)."""
+    for i, op in enumerate(ops):
+        if op["op"] == "vertex_add":
+            op = {**op, "pid": op["pid"] % mdir.k}
+        mdir.apply_op(op)
+        if i == len(ops) // 2:
+            mdir.compact(0)
+    mdir.compact_all()
+
+
+def test_final_generation_all_engines_match_fresh_save(setup, tmp_path):
+    """OPAT + TraditionalMP + the scheduler batch (k=3) and MapReduceMP
+    (k=1 — one partition per local device) all serve the mutated
+    directory's final generation with answers identical to a from-scratch
+    save of the same final graph, oracle-verified."""
+    g, base, dqueries = setup
+    cfg = EngineConfig(cap=32768)
+
+    mirror = Mirror(g)
+    ops = random_ops(np.random.default_rng(42), mirror, 3, 10)
+    work = str(tmp_path / "eng3")
+    shutil.copytree(base, work)
+    mdir = open_mutable(work)
+    _apply_ops(mdir, ops)
+    fresh = mirror.to_graph()
+    view = mdir.snapshot()
+    assignment = np.asarray(view.assignment, np.int64)
+    view.release()
+    fresh_dir = str(tmp_path / "eng3-fresh")
+    save_partitioned_graph(
+        build_partitions(fresh, assignment, 3, scheme="kway_shem"),
+        fresh_dir)
+
+    refs = {}
+    fresh_sess = GraphSession.open(fresh_dir, engine="opat", seed=1,
+                                   config=cfg)
+    for dq in dqueries:
+        res = fresh_sess.submit(dq)
+        ref = match_disjunctive(fresh_sess.graph, dq,
+                                q_pad=res.answers.shape[1])
+        assert np.array_equal(res.answers, ref), dq.name
+        refs[dq.name] = ref
+
+    for engine in ("opat", "traditional"):
+        sess = GraphSession.open(work, engine=engine, seed=1,
+                                 processors=2, config=cfg)
+        for dq in dqueries:
+            res = sess.submit(dq)
+            assert np.array_equal(res.answers, refs[dq.name]), \
+                (engine, dq.name)
+        if engine == "opat":
+            report = sess.submit_many(dqueries)
+            for r in report.results:
+                assert np.array_equal(r.answers, refs[r.name]), r.name
+
+    # MapReduceMP: its own k=1 directory, same op stream
+    work1 = str(tmp_path / "eng1")
+    GraphSession(g, k=1, scheme="kway_shem", engine="opat",
+                 seed=1).save(work1)
+    mdir1 = open_mutable(work1)
+    _apply_ops(mdir1, ops)                       # same logical final state
+    mr = GraphSession.open(work1, engine="mapreduce", seed=1, config=cfg)
+    for dq in dqueries:
+        res = mr.submit(dq)
+        assert np.array_equal(res.answers, refs[dq.name]), dq.name
+
+
+# ---------------------------------------------------------------------------
+# (3) generation pinning under a mid-run compaction
+# ---------------------------------------------------------------------------
+
+def test_pinned_queries_survive_mid_run_compaction(setup, tmp_path):
+    g, base, dqueries = setup
+    work = str(tmp_path / "pin")
+    shutil.copytree(base, work)
+    sess = GraphSession.open(work, engine="opat", seed=1,
+                             config=EngineConfig(cap=32768))
+    gen0 = sess.generation
+    sched = sess.scheduler()
+    for dq in dqueries:
+        sched.admit(dq)
+    pinned_graph = sched.view.graph
+    pinned_files = sched.view.files()
+    refs_pinned = {}
+    partial = sched.run(max_rounds=1)            # serving has STARTED
+
+    # mutation designed to change answers: delete a vertex bound by the
+    # first query's answers, so generation G+1 provably answers
+    # differently than the pinned generation G
+    ref0 = match_disjunctive(pinned_graph, dqueries[0], q_pad=8)
+    assert ref0.size, "fixture query must have answers"
+    victim = int(ref0[ref0 >= 0].flat[0])
+    sess.del_vertex(victim)
+    new_gen = sess.compact_all()
+    assert new_gen > gen0 and sess.generation == new_gen
+    assert not np.array_equal(
+        match_disjunctive(sess.graph, dqueries[0], q_pad=8), ref0)
+
+    # the pinned generation's files survive the compaction's GC
+    for fname in pinned_files:
+        assert os.path.exists(os.path.join(work, fname)), fname
+
+    # a query admitted AFTER the publish still joins generation G —
+    # one scheduler, one generation
+    sched.admit(dqueries[0])
+    report = sched.run()                          # drain
+    results = partial.results + report.results
+    assert len(results) == len(dqueries) + 1
+    for res in results:
+        assert res.generation == gen0, res.name
+        for rep in res.reports:
+            assert rep.stats.generation == gen0
+        ref = match_disjunctive(
+            pinned_graph, next(q for q in dqueries if q.name == res.name),
+            q_pad=res.answers.shape[1])
+        assert np.array_equal(res.answers, ref), res.name
+
+    # fresh opens (and fresh submits on the live session) see G+1
+    re_sess = GraphSession.open(work, engine="opat", seed=1,
+                                config=EngineConfig(cap=32768))
+    assert re_sess.generation == new_gen
+    res = sess.submit(dqueries[0])
+    assert res.generation == new_gen
+    assert np.array_equal(
+        res.answers,
+        match_disjunctive(sess.graph, dqueries[0],
+                          q_pad=res.answers.shape[1]))
+
+    # GC fires only once no pin remains
+    live = sess._mdir.catalog
+    live_files = ({p["shard"] for p in live.manifest["partitions"]}
+                  | {live.graph_file})
+    superseded = pinned_files - live_files
+    assert superseded, "compaction must have superseded some files"
+    sess._mdir.gc()                               # sched still pinned
+    for fname in superseded:
+        assert os.path.exists(os.path.join(work, fname)), fname
+    sched.close()
+    sess._mdir.gc()
+    for fname in superseded:
+        assert not os.path.exists(os.path.join(work, fname)), fname
+    # and the closed scheduler refuses further use
+    with pytest.raises(RuntimeError, match="close"):
+        sched.admit(dqueries[0])
+
+
+# ---------------------------------------------------------------------------
+# (4) observability + guardrails
+# ---------------------------------------------------------------------------
+
+def test_generation_surfacing_and_delta_counts(setup, tmp_path):
+    g, base, dqueries = setup
+    work = str(tmp_path / "obs")
+    shutil.copytree(base, work)
+    sess = GraphSession.open(work, engine="opat", seed=1,
+                             config=EngineConfig(cap=32768))
+    assert sess.mutable and sess.generation == 0
+    res = sess.submit(dqueries[0])
+    assert res.generation == 0
+    assert all(rep.stats.generation == 0 for rep in res.reports)
+
+    alive = [i for i in range(g.n_nodes)][:4]
+    sess.add_edge(alive[0], alive[1], "E_obs")
+    sess.add_edge(alive[2], alive[3], "E_obs")
+    prof = sess.workload_profile()
+    pending = [p["delta_count"] for p in prof["partitions"]]
+    assert sum(pending) == prof["pending_deltas"] > 0
+    assert prof["generation"] == 0 and prof["compactions"] == 0
+
+    hot = sess.compact_hot(min_pending=1)
+    assert hot                                    # something was pending
+    prof = sess.workload_profile()
+    assert prof["pending_deltas"] == 0
+    assert prof["compactions"] == len(hot)
+    assert prof["generation"] == sess.generation == len(hot)
+    res = sess.submit(dqueries[0])
+    assert res.generation == sess.generation
+    assert np.array_equal(
+        res.answers,
+        match_disjunctive(sess.graph, dqueries[0],
+                          q_pad=res.answers.shape[1]))
+
+
+def test_in_ram_sessions_have_no_generations(setup):
+    g, _, dqueries = setup
+    sess = GraphSession(g, k=3, scheme="kway_shem", engine="opat", seed=1,
+                        config=EngineConfig(cap=32768))
+    assert not sess.mutable and sess.generation is None
+    res = sess.submit(dqueries[0])
+    assert res.generation is None
+    assert all(rep.stats.generation is None for rep in res.reports)
+    prof = sess.workload_profile()
+    assert "generation" not in prof and "pending_deltas" not in prof
+    assert "delta_count" not in prof["partitions"][0]
+    with pytest.raises(RuntimeError, match="disk-backed"):
+        sess.add_edge(0, 1, "E_x")
+    with pytest.raises(RuntimeError, match="disk-backed"):
+        sess.compact_all()
+
+
+def test_mutation_guardrails(setup, tmp_path):
+    g, base, _ = setup
+    work = str(tmp_path / "guard")
+    shutil.copytree(base, work)
+    mdir = open_mutable(work)
+    mdir.del_vertex(3)
+    with pytest.raises(ValueError, match="deleted"):
+        mdir.add_edge(3, 5, "E_x")
+    with pytest.raises(ValueError, match="out of range"):
+        mdir.add_edge(0, 10_000, "E_x")
+    with pytest.raises(ValueError, match="unknown delta op"):
+        mdir.apply_op({"op": "nope"})

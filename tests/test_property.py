@@ -6,6 +6,10 @@ for random graphs and random (connected) queries — the paper's correctness
 claim (Sec. 4.2) exercised adversarially.  Also: partitioner validity and
 plan well-formedness under the same generators.
 """
+import os
+import shutil
+import tempfile
+
 import numpy as np
 import pytest
 
@@ -14,9 +18,10 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import (EngineConfig, MAX_SN, MIN_SN, RANDOM_SN, OPATEngine,
-                        build_catalog, build_partitions, generate_plan,
-                        match_query, partition_graph)
+from repro.core import (EngineConfig, GraphSession, MAX_SN, MIN_SN,
+                        RANDOM_SN, OPATEngine, build_catalog,
+                        build_partitions, generate_plan, match_query,
+                        partition_graph)
 from repro.core.graph import GraphBuilder
 from repro.core.query import Query, QueryEdge, QueryNode
 
@@ -88,6 +93,54 @@ def test_partitioned_equals_oracle(gq, q, k, scheme, heuristic):
     ref = match_query(g, q, q_pad=8)
     got = np.unique(res.answers, axis=0)
     assert got.shape == ref.shape and np.array_equal(got, ref)
+
+
+@given(gq=random_graph(), q=random_query(), k=st.integers(1, 3),
+       n_ops=st.integers(1, 8))
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+def test_streaming_interleaving_equals_fresh_save(gq, q, k, n_ops):
+    """ISSUE 8 rebuild-equivalence property: after a RANDOM interleaving
+    of inserts, deletes, and compactions, (a) the pending-delta overlay
+    answers exactly like the oracle over a from-scratch build of the same
+    final edge set, and (b) folding every partition (``compact_all``)
+    changes no answer — deltas are invisible to query semantics."""
+    from test_mutation import Mirror, graph_canon, random_ops
+    from repro.storage import save_partitioned_graph
+    from repro.storage.deltas import open_mutable
+    g, seed = gq
+    rng = np.random.default_rng(seed)
+    assign = partition_graph(g, k, "fast", seed=seed % 97)
+    pg = build_partitions(g, assign, k, scheme="fast")
+    root = tempfile.mkdtemp(prefix="pgqp-prop-")
+    try:
+        gdir = os.path.join(root, "g")
+        save_partitioned_graph(pg, gdir)
+        mdir = open_mutable(gdir)
+        mirror = Mirror(g)
+        for op in random_ops(rng, mirror, k, n_ops):
+            mdir.apply_op(op)
+            if rng.random() < 0.25:
+                mdir.compact(int(rng.integers(k)))
+        view = mdir.snapshot()
+        try:
+            assert graph_canon(view.graph) == mirror.canon()
+        finally:
+            view.release()
+        # (a) serve the final generation WITH its pending deltas
+        fresh = mirror.to_graph()
+        ref = match_query(fresh, q, q_pad=8)
+        sess = GraphSession.open(gdir, engine="opat", seed=int(seed % 89),
+                                 config=EngineConfig(cap=16384, q_pad=8))
+        got = np.unique(sess.submit(q).answers, axis=0)
+        assert got.shape == ref.shape and np.array_equal(got, ref)
+        # (b) folding is answer-invariant
+        sess.compact_all()
+        got2 = np.unique(sess.submit(q).answers, axis=0)
+        assert np.array_equal(got2, ref)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
 
 
 @given(gq=random_graph(), k=st.integers(1, 5),
