@@ -31,7 +31,7 @@ from repro.core import (ALL_HEURISTICS, BUDGET_HEURISTICS, EngineConfig,
                         avg_load_ratio_for_batch, build_catalog,
                         build_partitions, generate_plan, match_disjunctive,
                         partition_graph, partition_quality,
-                        total_connected_components)
+                        total_connected_components, validate_run_residency)
 from repro.data.generators import (imdb_like_graph, imdb_queries,
                                    subgen_like_graph, subgen_queries,
                                    waw_skewed_graph, waw_skewed_queries)
@@ -119,9 +119,13 @@ def run_sweep(workloads: Sequence[Workload],
             for dq in wl.dqueries:
                 for heuristic in heuristics:
                     res = sess.submit(dq, heuristic=heuristic)
-                    stats.append(aggregate_disjuncts(
+                    merged = aggregate_disjuncts(
                         res.stats, f"{wl.name}:{dq.name}", scheme,
-                        heuristic))
+                        heuristic)
+                    # OPAT's load unit is the single partition, so the
+                    # residency classes must tile the load sequence
+                    validate_run_residency(merged)
+                    stats.append(merged)
     return SweepResult(stats=stats, total_cc=total_cc,
                        wall_s=time.time() - t0)
 
@@ -174,10 +178,12 @@ def run_budget_sweep(workloads: Sequence[Workload],
                                 heuristic=heuristic).stats[0])
                     saved = sum(f.n_loads - r.n_loads
                                 for f, r in zip(full.stats, per_disjunct))
-                    stats.append(aggregate_disjuncts(
+                    merged = aggregate_disjuncts(
                         per_disjunct, f"{wl.name}:{dq.name}", scheme,
                         heuristic, answers_requested=kk,
-                        loads_saved_vs_full=saved))
+                        loads_saved_vs_full=saved)
+                    validate_run_residency(merged)
+                    stats.append(merged)
     return BudgetSweepResult(stats=stats, wall_s=time.time() - t0)
 
 

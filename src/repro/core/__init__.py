@@ -42,7 +42,7 @@ from .heuristics import (ALL_HEURISTICS, BUDGET_HEURISTICS, MAX_SN, MAX_YIELD,
                          rank_partitions, rank_partitions_shared)
 from .metrics import (RunStats, avg_load_ratio_across_schemes,
                       avg_load_ratio_for_batch, l_ideal_for_plan,
-                      total_connected_components)
+                      total_connected_components, validate_run_residency)
 from .opat import OPATEngine, OPATResult
 from .oracle import match_disjunctive, match_query
 from .partition import SCHEMES, PartitionScheme, partition_graph, partition_quality
@@ -70,6 +70,7 @@ __all__ = [
     "QueryRunner", "RunReport", "RunRequest", "truncate_answers",
     "RunStats", "avg_load_ratio_across_schemes", "avg_load_ratio_for_batch",
     "l_ideal_for_plan", "total_connected_components",
+    "validate_run_residency",
     "OPATEngine", "OPATResult", "match_disjunctive", "match_query",
     "SCHEMES", "PartitionScheme", "partition_graph", "partition_quality",
     "Plan", "PlanArrays", "PlanStep", "generate_plan",

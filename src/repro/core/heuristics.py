@@ -45,21 +45,35 @@ SHARED_HEURISTICS = (MAX_SN, MAX_YIELD_SHARED)        # workload-level ranking
 def rank_partitions(heuristic: str, eligible: Sequence[int],
                     sni_counts: Sequence[int], rng: np.random.Generator,
                     completion_rates: Optional[Mapping[int, float]] = None,
-                    ) -> List[int]:
+                    tracer=None) -> List[int]:
     """Return ``eligible`` ordered best-first under ``heuristic``.
 
     ``completion_rates`` maps pid -> observed completed/(completed+spawned)
     rate in [0, 1]; only MAX-YIELD reads it (missing -> 0.5, the smoothed
     no-information prior).
+
+    An enabled ``tracer`` (obs/trace.py) records one *decision record* per
+    call: the per-partition score breakdown (SNI term, completion-rate
+    term, final score) plus the chosen pid and ranked order, so
+    ``tools/trace_report.py`` can replay why P3 was loaded before P1.
+    The untraced path computes nothing extra.
     """
     elig = list(eligible)
     if not elig:
         return []
     if heuristic == RANDOM_SN:
         order = list(rng.permutation(len(elig)))
-        return [elig[i] for i in order]
+        ranked = [elig[i] for i in order]
+        if tracer is not None and tracer.enabled:
+            tracer.decision(
+                "heuristic.rank", heuristic=heuristic, chosen=ranked[0],
+                ranked=ranked,
+                breakdown={int(p): {"sni": int(sni_counts[p]), "score": 0.0}
+                           for p in elig})
+        return ranked
     counts = np.asarray([sni_counts[p] for p in elig], dtype=np.int64)
     tie = rng.permutation(len(elig))  # random tie-break
+    rates = None
     if heuristic == MAX_SN:
         keys = list(zip(-counts, tie))
     elif heuristic == MIN_SN:
@@ -74,30 +88,46 @@ def rank_partitions(heuristic: str, eligible: Sequence[int],
         raise ValueError(f"unknown heuristic {heuristic!r}")
     order = sorted(range(len(elig)),
                    key=lambda i: (float(keys[i][0]), int(keys[i][1])))
-    return [elig[i] for i in order]
+    ranked = [elig[i] for i in order]
+    if tracer is not None and tracer.enabled:
+        breakdown = {}
+        for i, p in enumerate(elig):
+            entry = {"sni": int(counts[i]),
+                     # sort keys negate "bigger is better" scores; expose
+                     # the natural orientation (argmax(score) == chosen)
+                     "score": float(-keys[i][0]) if heuristic != MIN_SN
+                     else float(-counts[i])}
+            if rates is not None:
+                entry["completion_rate"] = float(rates[i])
+            breakdown[int(p)] = entry
+        tracer.decision("heuristic.rank", heuristic=heuristic,
+                        chosen=ranked[0], ranked=ranked,
+                        breakdown=breakdown)
+    return ranked
 
 
 def choose_partition(heuristic: str, eligible: Sequence[int],
                      sni_counts: Sequence[int], rng: np.random.Generator,
                      completion_rates: Optional[Mapping[int, float]] = None,
-                     ) -> int:
+                     tracer=None) -> int:
     return rank_partitions(heuristic, eligible, sni_counts, rng,
-                           completion_rates)[0]
+                           completion_rates, tracer=tracer)[0]
 
 
 def choose_top_p(heuristic: str, eligible: Sequence[int],
                  sni_counts: Sequence[int], p: int,
                  rng: np.random.Generator,
                  completion_rates: Optional[Mapping[int, float]] = None,
-                 ) -> List[int]:
+                 tracer=None) -> List[int]:
     return rank_partitions(heuristic, eligible, sni_counts, rng,
-                           completion_rates)[:p]
+                           completion_rates, tracer=tracer)[:p]
 
 
 def rank_partitions_shared(heuristic: str,
                            waiting: Mapping[int, Sequence[Tuple]],
                            rng: np.random.Generator,
-                           fairness_gamma: float = 0.0) -> List[int]:
+                           fairness_gamma: float = 0.0,
+                           tracer=None) -> List[int]:
     """Workload-level ranking: order candidate partitions best-first by the
     total expected yield over every pending query waiting on them.
 
@@ -142,21 +172,40 @@ def rank_partitions_shared(heuristic: str,
         return float(obs[2]) if len(obs) > 2 else 0.0
 
     if heuristic == MAX_SN:
-        scores = [float(sum(obs[0] for obs in waiting[p])) for p in pids]
+        base = [float(sum(obs[0] for obs in waiting[p])) for p in pids]
     elif heuristic == MAX_YIELD_SHARED:
-        scores = [float(sum(obs[0] * obs[1] for obs in waiting[p]))
-                  for p in pids]
+        base = [float(sum(obs[0] * obs[1] for obs in waiting[p]))
+                for p in pids]
     else:
         raise ValueError(f"unknown shared heuristic {heuristic!r} "
                          f"(one of {SHARED_HEURISTICS})")
+    scores = list(base)
+    fairness = [0.0] * len(pids)
     if fairness_gamma:
-        scores = [s + fairness_gamma * sum(obs[0] * age_of(obs)
-                                           for obs in waiting[p])
-                  for s, p in zip(scores, pids)]
+        fairness = [fairness_gamma * sum(obs[0] * age_of(obs)
+                                         for obs in waiting[p])
+                    for p in pids]
+        scores = [s + f for s, f in zip(scores, fairness)]
     urgency = [sum(obs[0] * (float(obs[3]) if len(obs) > 3 else 0.0)
                    for obs in waiting[p]) for p in pids]
     if any(urgency):
         scores = [s + u for s, u in zip(scores, urgency)]
+    else:
+        urgency = [0.0] * len(pids)
     tie = rng.permutation(len(pids))
     order = sorted(range(len(pids)), key=lambda i: (-scores[i], int(tie[i])))
-    return [pids[i] for i in order]
+    ranked = [pids[i] for i in order]
+    if tracer is not None and tracer.enabled:
+        tracer.decision(
+            "heuristic.rank_shared", heuristic=heuristic,
+            fairness_gamma=float(fairness_gamma),
+            chosen=ranked[0], ranked=ranked,
+            breakdown={int(p): {
+                "sni": int(sum(obs[0] for obs in waiting[p])),
+                "waiters": len(waiting[p]),
+                "base": base[i],
+                "fairness": fairness[i],
+                "urgency": urgency[i],
+                "score": scores[i],
+            } for i, p in enumerate(pids)})
+    return ranked

@@ -88,7 +88,8 @@ class MapReduceMPEngine:
                  m_limit: Optional[int] = None,
                  heuristic: str = MAX_SN,
                  max_outer_iters: int = 4096,
-                 store: Optional[PartitionStore] = None):
+                 store: Optional[PartitionStore] = None,
+                 tracer=None):
         self.pg = pg
         self.mesh = mesh
         self.cfg = cfg or EngineConfig()
@@ -111,6 +112,9 @@ class MapReduceMPEngine:
         # the device-resident shards (a warm load).
         self.store = store if store is not None else PartitionStore(pg)
         self._part_sharding = NamedSharding(mesh, P(mesh.axis_names[0]))
+        from ..obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._eval_traced = False
 
     # -- the SPMD program ----------------------------------------------------
 
@@ -403,12 +407,24 @@ class MapReduceMPEngine:
         load0 = self.store.stats.copy()
         entry = self.store.get_stacked(tuple(range(self.P)),
                                        sharding=self._part_sharding)
-        faa, faa_n, overflow, iters, exhausted, comp, spawn = self._compiled(
-            entry.part, entry.g2l, self.store.owner, plan_arrays,
-            np.int32(plan.n_steps), np.int32(seed),
-            np.int32(min(dev_budget, int(_NO_BUDGET))))
-        faa = np.asarray(faa)
-        faa_n = np.asarray(faa_n)
+        with self.tracer.span("kernel.eval", engine="mapreduce",
+                              n_parts=self.P) as ksp:
+            if not self._eval_traced:
+                self._eval_traced = True
+                ksp.set(first_call=True)
+                with self.tracer.span("kernel.compile", engine="mapreduce"):
+                    out = self._compiled(
+                        entry.part, entry.g2l, self.store.owner, plan_arrays,
+                        np.int32(plan.n_steps), np.int32(seed),
+                        np.int32(min(dev_budget, int(_NO_BUDGET))))
+            else:
+                out = self._compiled(
+                    entry.part, entry.g2l, self.store.owner, plan_arrays,
+                    np.int32(plan.n_steps), np.int32(seed),
+                    np.int32(min(dev_budget, int(_NO_BUDGET))))
+            faa, faa_n, overflow, iters, exhausted, comp, spawn = out
+            faa = np.asarray(faa)          # device sync inside the span
+            faa_n = np.asarray(faa_n)
         if bool(np.asarray(overflow).any()):
             raise RuntimeError(
                 "MapReduceMP buffer overflow; raise cap/quota")

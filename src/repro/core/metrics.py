@@ -70,6 +70,39 @@ class RunStats:
         return min(1.0, self.l_ideal / self.n_loads)
 
 
+def validate_run_residency(stats: RunStats,
+                           per_partition_loads: bool = True
+                           ) -> Optional[dict]:
+    """Consistency invariant over a run's residency counters: every load
+    in ``loads`` was served exactly once by one residency class, so
+    ``cold_loads + demand_warm + prefetch_hits == n_loads`` (the store
+    counts a prefetch hit as a *kind* of warm load, so ``demand_warm`` is
+    ``warm_loads - prefetch_hits``).
+
+    Returns ``None`` when the run carries no residency counters
+    (hand-built ``RunStats``); otherwise the disjoint breakdown dict from
+    ``obs.metrics.validate_residency``.  Raises ``ValueError`` on
+    inconsistent accounting — a store double-count or a load path that
+    skipped the counters.
+
+    ``per_partition_loads=False`` skips the ``n_loads`` equality and only
+    checks the counters' internal consistency: TraditionalMP's store load
+    unit is the stacked top-p bundle (one get per iteration, p entries in
+    ``loads``) and MapReduceMP keeps every partition resident
+    (``loads == []``), so for those engines the equality doesn't apply.
+    """
+    if stats.cold_loads is None or stats.warm_loads is None \
+            or stats.prefetch_hits is None:
+        return None
+    from ..obs.metrics import validate_residency
+    if per_partition_loads:
+        return validate_residency(stats.cold_loads, stats.warm_loads,
+                                  stats.prefetch_hits, stats.n_loads)
+    return validate_residency(stats.cold_loads, stats.warm_loads,
+                              stats.prefetch_hits,
+                              stats.cold_loads + stats.warm_loads)
+
+
 def l_ideal_for_plan(pg: PartitionedGraph, plan: Plan) -> int:
     """#required partitions: any partition holding a node that matches any
     query-node predicate (paper Sec. 1 / 5.3)."""

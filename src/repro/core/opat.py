@@ -24,7 +24,7 @@ split.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
@@ -81,7 +81,8 @@ class OPATEngine:
 
     def __init__(self, pg: PartitionedGraph, cfg: Optional[EngineConfig] = None,
                  store: Optional[PartitionStore] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 tracer: Optional[Any] = None):
         self.pg = pg
         self.cfg = cfg or EngineConfig()
         assert pg.node_pad > 0, "build_partitions(uniform_pad=True) required"
@@ -90,6 +91,11 @@ class OPATEngine:
         self._beval = None
         self.store = store if store is not None else PartitionStore(pg)
         self.prefetch = prefetch
+        from ..obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # flips after the first kernel call so the jit compile shows up as
+        # a one-off "kernel.compile" child span, not steady-state eval time
+        self._eval_traced = False
 
     def batched_evaluator(self):
         """The *plan-batched* partition evaluator: ``vmap`` of the compiled
@@ -127,11 +133,27 @@ class OPATEngine:
                 in_rows[: chunk.n] = chunk.rows
                 in_step[: chunk.n] = chunk.step
                 in_valid[: chunk.n] = True
-            res = self._eval(entry.part, entry.g2l, self.store.owner,
-                             plan_arrays, np.int32(n_steps),
-                             in_rows, in_step, in_valid,
-                             np.bool_(seed_fresh and ci == 0))
-            if bool(res.overflow):
+            with self.tracer.span("kernel.eval", pid=pid, engine="opat",
+                                  rows=int(chunk.n)) as ksp:
+                if not self._eval_traced:
+                    # the first call traces+compiles the jitted evaluator;
+                    # nest that one-off under its own child span so
+                    # steady-state eval time reads clean
+                    self._eval_traced = True
+                    ksp.set(first_call=True)
+                    with self.tracer.span("kernel.compile", engine="opat"):
+                        res = self._eval(entry.part, entry.g2l,
+                                         self.store.owner,
+                                         plan_arrays, np.int32(n_steps),
+                                         in_rows, in_step, in_valid,
+                                         np.bool_(seed_fresh and ci == 0))
+                else:
+                    res = self._eval(entry.part, entry.g2l, self.store.owner,
+                                     plan_arrays, np.int32(n_steps),
+                                     in_rows, in_step, in_valid,
+                                     np.bool_(seed_fresh and ci == 0))
+                overflow = bool(res.overflow)   # device sync inside the span
+            if overflow:
                 raise RuntimeError(
                     f"evaluator buffer overflow on partition {pid}; raise "
                     f"EngineConfig.cap (currently {cfg.cap})")
@@ -165,26 +187,30 @@ class OPATEngine:
             sni = {p: st.sni_count(p) for p in eligible}
             rates = (st.completion_rates() if heuristic == MAX_YIELD
                      else None)
-            ranked = rank_partitions(heuristic, eligible, sni, rng, rates)
+            ranked = rank_partitions(heuristic, eligible, sni, rng, rates,
+                                     tracer=self.tracer)
             pid = ranked[0]
-            st.loads.append(pid)
-            st.iterations += 1
-            batch = st.ima[pid]
-            st.ima[pid] = BindingBatch.empty(cfg.q_pad)
-            seed_fresh = bool(st.fresh_pending[pid])
-            st.fresh_pending[pid] = False
-            entry = self.store.get(pid)
-            # double-buffered streaming: pin pid, then stage the
-            # heuristic's runner-up while pid evaluates — device_put
-            # dispatch returns immediately, so the H2D copy overlaps the
-            # evaluator work (ROADMAP item #1); the pin guarantees the
-            # in-flight staging can evict anything BUT the partition the
-            # running kernel reads (store may exceed capacity by one slot)
-            with self.store.pinned(pid):
-                if self.prefetch and len(ranked) > 1:
-                    self.store.prefetch(ranked[1])
-                self._run_partition(entry, plan_arrays, plan.n_steps, batch,
-                                    seed_fresh, st)
+            with self.tracer.span("opat.round", pid=pid,
+                                  iteration=st.iterations,
+                                  pending_rows=int(st.ima[pid].n)):
+                st.loads.append(pid)
+                st.iterations += 1
+                batch = st.ima[pid]
+                st.ima[pid] = BindingBatch.empty(cfg.q_pad)
+                seed_fresh = bool(st.fresh_pending[pid])
+                st.fresh_pending[pid] = False
+                entry = self.store.get(pid)
+                # double-buffered streaming: pin pid, then stage the
+                # heuristic's runner-up while pid evaluates — device_put
+                # dispatch returns immediately, so the H2D copy overlaps the
+                # evaluator work (ROADMAP item #1); the pin guarantees the
+                # in-flight staging can evict anything BUT the partition the
+                # running kernel reads (store may exceed capacity by one slot)
+                with self.store.pinned(pid):
+                    if self.prefetch and len(ranked) > 1:
+                        self.store.prefetch(ranked[1])
+                    self._run_partition(entry, plan_arrays, plan.n_steps,
+                                        batch, seed_fresh, st)
 
         answers = truncate_answers(st.unique_answers(), max_answers)
         delta = self.store.stats - load0

@@ -116,6 +116,11 @@ class _Admitted:
     max_answers: Optional[int]
     load_stats: LoadStats = dataclasses.field(default_factory=LoadStats)
     finished_at: Optional[float] = None
+    # perf_counter bounds of the query's life in the scheduler — the
+    # tracer's timebase, so _collect_results can emit one root "query"
+    # span per retired query (admission → retirement) via add_span
+    admitted_perf: float = 0.0
+    finished_perf: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -173,6 +178,8 @@ class QueryScheduler:
         self.fairness_gamma = float(fairness_gamma)
         self.pg = session.pg
         self.store = session.store
+        from ..obs.trace import NULL_TRACER
+        self.tracer = getattr(session, "tracer", None) or NULL_TRACER
         # generation pinning (storage/deltas.py): the scheduler takes its
         # OWN pin on the session's current view at construction — every
         # round of every run() resolves loads, SNI counts, and plans
@@ -198,6 +205,9 @@ class QueryScheduler:
         self._next_qid = 0
         self._jobs: List[_Job] = []
         self._touched: Set[int] = set()   # pids the shared loop ever loaded
+        # batch buckets whose vmapped evaluator trace already compiled —
+        # the first call per bucket gets a "kernel.compile" child span
+        self._traced_buckets: Set[int] = set()
         self.loads: List[int] = []
         self.batch_sizes: List[int] = []
 
@@ -238,7 +248,8 @@ class QueryScheduler:
                 state=st, max_answers=max_answers,
                 urgency=float(urgency)))
         self._admitted[qid] = _Admitted(qid=qid, name=query.name, jobs=jobs,
-                                        max_answers=max_answers)
+                                        max_answers=max_answers,
+                                        admitted_perf=time.perf_counter())
         self._jobs.extend(jobs)
         return qid
 
@@ -362,25 +373,28 @@ class QueryScheduler:
                       for p, js in waiters.items()}
             ranked = rank_partitions_shared(
                 self.heuristic, scored, rng,
-                fairness_gamma=self.fairness_gamma)
+                fairness_gamma=self.fairness_gamma, tracer=self.tracer)
             pid = int(ranked[0])
             batch = waiters[pid]
-            ev0 = self.store.stats.copy()
-            entry = self.store.get(pid)
-            # the attributable event is the load itself (cold/warm +
-            # prefetch hit); snapshot it BEFORE staging the runner-up so
-            # a query retiring this round is never charged prefetch
-            # traffic for a partition it takes no part in
-            event = self.store.stats - ev0
-            # double-buffered streaming: pin pid, then stage the
-            # WORKLOAD's runner-up while pid evaluates — the shared
-            # generalization of OPAT's per-query prefetch; the pin keeps
-            # the overlapped H2D copy from evicting the entry the batched
-            # evaluator is reading
-            with self.store.pinned(pid):
-                if self.prefetch and len(ranked) > 1:
-                    self.store.prefetch(int(ranked[1]))
-                self._eval_batch(beval, entry, pid, batch)
+            with self.tracer.span("scheduler.round", pid=pid, round=rounds,
+                                  batch=len(batch),
+                                  qids=sorted({j.qid for j in batch})):
+                ev0 = self.store.stats.copy()
+                entry = self.store.get(pid)
+                # the attributable event is the load itself (cold/warm +
+                # prefetch hit); snapshot it BEFORE staging the runner-up so
+                # a query retiring this round is never charged prefetch
+                # traffic for a partition it takes no part in
+                event = self.store.stats - ev0
+                # double-buffered streaming: pin pid, then stage the
+                # WORKLOAD's runner-up while pid evaluates — the shared
+                # generalization of OPAT's per-query prefetch; the pin keeps
+                # the overlapped H2D copy from evicting the entry the batched
+                # evaluator is reading
+                with self.store.pinned(pid):
+                    if self.prefetch and len(ranked) > 1:
+                        self.store.prefetch(int(ranked[1]))
+                    self._eval_batch(beval, entry, pid, batch)
             self.loads.append(pid)
             self.batch_sizes.append(len(batch))
             # round-scoped attribution: the event lands once in each
@@ -448,7 +462,7 @@ class QueryScheduler:
                       for pp, js in waiters.items()}
             ranked = rank_partitions_shared(
                 self.heuristic, scored, rng,
-                fairness_gamma=self.fairness_gamma)
+                fairness_gamma=self.fairness_gamma, tracer=self.tracer)
             # canonical sorted order + first-pid padding, exactly as the
             # per-query TMP loop: the stacked store key is then
             # permutation-invariant across rounds (padding lanes are
@@ -499,11 +513,27 @@ class QueryScheduler:
                     j.state.fresh_pending[pid] = False
                 lanes_of.append(mine)
             ev0 = self.store.stats.copy()
-            entry = self.store.get_stacked(tuple(exec_set))
-            event = self.store.stats - ev0
-            res = seval(entry.part, entry.g2l, self.store.owner, stacked,
-                        n_steps, in_rows, in_step, in_valid, seeds)
-            overflow = np.asarray(res.overflow)
+            with self.tracer.span("scheduler.round", pids=chosen,
+                                  round=rounds, batch=B,
+                                  qids=sorted({j.qid for j in batch})):
+                entry = self.store.get_stacked(tuple(exec_set))
+                event = self.store.stats - ev0
+                with self.tracer.span("kernel.eval", pids=chosen, batch=B,
+                                      bucket=Bpad) as ksp:
+                    if -Bpad not in self._traced_buckets:
+                        # negative keys: the TMP double-vmap's jit cache is
+                        # separate from the OPAT batched evaluator's
+                        self._traced_buckets.add(-Bpad)
+                        ksp.set(first_call=True)
+                        with self.tracer.span("kernel.compile", bucket=Bpad):
+                            res = seval(entry.part, entry.g2l,
+                                        self.store.owner, stacked, n_steps,
+                                        in_rows, in_step, in_valid, seeds)
+                    else:
+                        res = seval(entry.part, entry.g2l, self.store.owner,
+                                    stacked, n_steps, in_rows, in_step,
+                                    in_valid, seeds)
+                    overflow = np.asarray(res.overflow)
             comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
             out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
             out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
@@ -575,9 +605,20 @@ class QueryScheduler:
                     in_valid[b, :n] = True
             sf = np.asarray([s and ci == 0 for s in seed_flags]
                             + [False] * (Bpad - B))
-            res = beval(entry.part, entry.g2l, self.store.owner, stacked,
-                        n_steps, in_rows, in_step, in_valid, sf)
-            overflow = np.asarray(res.overflow)
+            with self.tracer.span("kernel.eval", pid=pid, batch=B,
+                                  bucket=Bpad) as ksp:
+                if Bpad not in self._traced_buckets:
+                    self._traced_buckets.add(Bpad)
+                    ksp.set(first_call=True)
+                    with self.tracer.span("kernel.compile", bucket=Bpad):
+                        res = beval(entry.part, entry.g2l, self.store.owner,
+                                    stacked, n_steps, in_rows, in_step,
+                                    in_valid, sf)
+                else:
+                    res = beval(entry.part, entry.g2l, self.store.owner,
+                                stacked, n_steps, in_rows, in_step,
+                                in_valid, sf)
+                overflow = np.asarray(res.overflow)
             comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
             out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
             out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
@@ -627,6 +668,7 @@ class QueryScheduler:
                     self.batch_sizes.extend([1] * len(rep.stats.loads))
                 rec.load_stats = rec.load_stats + (self.store.stats - ev0)
                 rec.finished_at = time.time()
+                rec.finished_perf = time.perf_counter()
         finally:
             engine.pg = prev_pg
 
@@ -656,6 +698,7 @@ class QueryScheduler:
         for rec in self._admitted.values():
             if rec.finished_at is None and all(j.retired for j in rec.jobs):
                 rec.finished_at = now
+                rec.finished_perf = time.perf_counter()
         if newly and self.release_retired:
             # any partition the workload loaded that no pending job can
             # currently use is releasable — cumulative, so an early
@@ -717,6 +760,15 @@ class QueryScheduler:
                 name=rec.name, answers=answers, reports=reports,
                 latency_s=max(0.0, rec.finished_at - t0),
                 load_stats=rec.load_stats, qid=rec.qid, generation=gen))
+            if self.tracer.enabled and rec.finished_perf is not None:
+                # one root span per retired query, admission → retirement
+                # (externally-timed: the lifetime crosses many rounds, so
+                # no single call frame could carry it)
+                self.tracer.add_span(
+                    "query", rec.admitted_perf, rec.finished_perf,
+                    qid=rec.qid, query=rec.name, generation=gen,
+                    n_answers=int(answers.shape[0]),
+                    n_loads=sum(len(r.stats.loads) for r in reports))
         for qid in done:
             del self._admitted[qid]
         self._jobs = [j for j in self._jobs if not j.retired]

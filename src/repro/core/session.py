@@ -128,7 +128,8 @@ class GraphSession:
                  seed: int = 0,
                  pg: Optional[PartitionedGraph] = None,
                  mesh: Optional[Any] = None,
-                 catalog: Optional[Catalog] = None):
+                 catalog: Optional[Catalog] = None,
+                 tracer: Optional[Any] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         if pg is None:
@@ -156,6 +157,12 @@ class GraphSession:
         self._prefetch = prefetch
         self._mesh = mesh
         self.repartitions = 0
+        # observability (obs/trace.py): one tracer serves the whole stack
+        # threaded under this session — store, host tier, engines,
+        # scheduler, front end, delta layer.  The no-op default keeps
+        # untraced serving at pre-obs cost.
+        from ..obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.store: Optional[PartitionStore] = None
         # streaming updates (storage/deltas.py): a session built by
         # ``open`` owns the directory's writer handle and keeps one pinned
@@ -185,16 +192,19 @@ class GraphSession:
                                     backing=self._backing,
                                     host_cache_parts=self._host_cache_parts,
                                     host_cache_bytes=self._host_cache_bytes,
-                                    read_ahead=self._read_ahead)
+                                    read_ahead=self._read_ahead,
+                                    tracer=self.tracer)
         engine = self.engine_name
         if engine == "opat":
             from .opat import OPATEngine
             self.engine: QueryRunner = OPATEngine(
-                pg, self.config, store=self.store, prefetch=self._prefetch)
+                pg, self.config, store=self.store, prefetch=self._prefetch,
+                tracer=self.tracer)
         elif engine == "traditional":
             from .traditional_mp import TraditionalMPEngine
             self.engine = TraditionalMPEngine(
-                pg, self._processors, self.config, store=self.store)
+                pg, self._processors, self.config, store=self.store,
+                tracer=self.tracer)
         else:
             from ..compat import make_part_mesh
             from .mapreduce_mp import MapReduceMPEngine
@@ -203,7 +213,7 @@ class GraphSession:
                 mesh = make_part_mesh(pg.k)
             self.engine = MapReduceMPEngine(
                 pg, mesh, self.config, heuristic=self.heuristic,
-                store=self.store)
+                store=self.store, tracer=self.tracer)
 
         # per-partition workload profile, accumulated across submits.
         # MapReduceMP runs as one compiled program with no host loop: it
@@ -259,7 +269,10 @@ class GraphSession:
         view = self._view
         ctx = (self.store.viewing(view) if view is not None
                else contextlib.nullcontext())
-        with ctx:
+        gen = int(view.generation) if view is not None else None
+        with self.tracer.span("query", query=query.name, heuristic=h,
+                              engine=self.engine_name,
+                              generation=gen) as qsp, ctx:
             for q in disjuncts:
                 plan = generate_plan(q, self.graph, self.catalog)
                 rep = self.engine.run_request(RunRequest(
@@ -268,8 +281,9 @@ class GraphSession:
                 a = rep.answers
                 answers = a if answers is None else np.unique(
                     np.concatenate([answers, a]), axis=0)
+            qsp.set(n_answers=int(answers.shape[0]),
+                    n_loads=sum(len(r.stats.loads) for r in reports))
         latency = time.time() - t0
-        gen = int(view.generation) if view is not None else None
         for rep in reports:
             rep.stats.generation = gen
         self._absorb(reports, answers)
@@ -537,7 +551,8 @@ class GraphSession:
              prefetch: bool = True,
              seed: int = 0,
              mesh: Optional[Any] = None,
-             verify_checksums: bool = True) -> "GraphSession":
+             verify_checksums: bool = True,
+             tracer: Optional[Any] = None) -> "GraphSession":
         """Open a ``save``d graph directory as an *out-of-core* session.
 
         Partition shards stay on disk; the store serves them through a
@@ -566,9 +581,12 @@ class GraphSession:
                    host_cache_parts=host_cache_parts,
                    host_cache_bytes=host_cache_bytes, read_ahead=read_ahead,
                    processors=processors, prefetch=prefetch, seed=seed,
-                   mesh=mesh)
+                   mesh=mesh, tracer=tracer)
         sess._mdir = mdir
         sess._view = view
+        # the directory's writes (append/compact/overlay rebuild) trace
+        # into the same stream as the session that owns it
+        mdir.tracer = sess.tracer
         return sess
 
     # -- streaming updates (storage/deltas.py) -----------------------------

@@ -168,7 +168,8 @@ class PartitionStore:
                  backing: Optional[Any] = None,
                  host_cache_parts: Optional[int] = None,
                  host_cache_bytes: Optional[int] = None,
-                 read_ahead: bool = True):
+                 read_ahead: bool = True,
+                 tracer: Optional[Any] = None):
         if capacity_parts is not None and capacity_parts < 1:
             raise ValueError(f"capacity_parts must be >= 1, got {capacity_parts}")
         if capacity_bytes is not None and capacity_bytes < 1:
@@ -187,6 +188,10 @@ class PartitionStore:
         self.max_stacked_entries = max_stacked_entries
         self.stats = LoadStats()
         self.backing = backing
+        # observability: spans on load/prefetch paths; defaults to the
+        # no-op singleton so hot loops pay ~nothing when untraced
+        from ..obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # the host tier the device cache stages from: the whole graph
         # pinned in RAM (no backing — pre-PR-5 behaviour), or a
         # disk-backed host LRU with background read-ahead (out of core)
@@ -194,7 +199,8 @@ class PartitionStore:
             from ..storage.host_cache import HostShardCache
             self._host_tier: Any = HostShardCache(
                 backing, self.stats, capacity_parts=host_cache_parts,
-                capacity_bytes=host_cache_bytes, read_ahead=read_ahead)
+                capacity_bytes=host_cache_bytes, read_ahead=read_ahead,
+                tracer=self.tracer)
         else:
             from ..storage.host_cache import HostArrayTier
             self._host_tier = HostArrayTier(pg)
@@ -366,11 +372,13 @@ class PartitionStore:
             if issued and pid in v.stale_pids:
                 self.stats.delta_overlays += 1
             return issued
-        entry = self._stage(pid, sharding=None)
-        entry.prefetched = True
-        self.stats.prefetch_issued += 1
-        self.stats.bytes_prefetched += entry.nbytes
-        self._insert(entry, cache_key=vk)
+        with self.tracer.span("store.prefetch", pid=pid) as sp:
+            entry = self._stage(pid, sharding=None)
+            entry.prefetched = True
+            self.stats.prefetch_issued += 1
+            self.stats.bytes_prefetched += entry.nbytes
+            sp.set(nbytes=entry.nbytes)
+            self._insert(entry, cache_key=vk)
         return True
 
     # -- pinning (double-buffered streaming) --------------------------------
@@ -465,19 +473,26 @@ class PartitionStore:
         # must not be served for a differently-sharded request either
         vk = self._vkey(key)
         ck = (vk, str(sharding)) if sharding is not None else vk
-        got = self._cache.get(ck)
-        if got is not None:
-            self._cache.move_to_end(ck)
-            self.stats.hits += 1
-            if got.prefetched:
-                got.prefetched = False
-                self.stats.prefetch_hits += 1
-            return got
-        entry = self._stage(key, sharding=sharding)
-        self.stats.misses += 1
-        self.stats.bytes_cold += entry.nbytes
-        self._insert(entry, cache_key=ck)
-        return entry
+        with self.tracer.span("store.load", pid=self._normkey(key)) as sp:
+            got = self._cache.get(ck)
+            if got is not None:
+                self._cache.move_to_end(ck)
+                self.stats.hits += 1
+                if got.prefetched:
+                    got.prefetched = False
+                    self.stats.prefetch_hits += 1
+                    sp.set(tier="prefetch")
+                else:
+                    sp.set(tier="warm")
+                return got
+            sp.set(tier="cold")
+            entry = self._stage(key, sharding=sharding)
+            self.stats.misses += 1
+            self.stats.bytes_cold += entry.nbytes
+            sp.set(nbytes=entry.nbytes,
+                   generation=self.current_generation)
+            self._insert(entry, cache_key=ck)
+            return entry
 
     def _stage(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:
         """Pull the host bundle through the host tier (a pinned-array

@@ -43,7 +43,8 @@ class TraditionalMPEngine:
 
     def __init__(self, pg: PartitionedGraph, n_processors: int,
                  cfg: Optional[EngineConfig] = None,
-                 store: Optional[PartitionStore] = None):
+                 store: Optional[PartitionStore] = None,
+                 tracer=None):
         assert n_processors >= 1
         self.pg = pg
         self.p = n_processors
@@ -55,6 +56,9 @@ class TraditionalMPEngine:
             self._eval, in_axes=(0, 0, None, None, None, 0, 0, 0, 0)))
         self._seval = None       # lazy: the queries x partitions double-vmap
         self.store = store if store is not None else PartitionStore(pg)
+        from ..obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._eval_traced = False
 
     def shared_evaluator(self):
         """The *stacked top-p, multi-query* evaluator: ``vmap`` over the
@@ -101,7 +105,8 @@ class TraditionalMPEngine:
             sni = {p: st.sni_count(p) for p in eligible}
             rates = (st.completion_rates() if heuristic == MAX_YIELD
                      else None)
-            chosen = choose_top_p(heuristic, eligible, sni, self.p, rng, rates)
+            chosen = choose_top_p(heuristic, eligible, sni, self.p, rng,
+                                  rates, tracer=self.tracer)
             per_iter.append(list(chosen))
             st.iterations += 1
             # process the set in sorted order: which processor runs which
@@ -158,12 +163,30 @@ class TraditionalMPEngine:
                     in_step[i, : b.n] = b.step
                     in_valid[i, : b.n] = True
 
-            entry = self.store.get_stacked(tuple(exec_set))
-            res = self._veval(entry.part, entry.g2l, self.store.owner,
-                              plan_arrays, np.int32(plan.n_steps),
-                              in_rows, in_step, in_valid,
-                              np.asarray(seeds, dtype=bool))
-            if bool(np.any(np.asarray(res.overflow))):
+            with self.tracer.span("engine.iteration", engine="traditional",
+                                  pids=list(map(int, exec_set)),
+                                  iteration=st.iterations):
+                entry = self.store.get_stacked(tuple(exec_set))
+                with self.tracer.span("kernel.eval", engine="traditional",
+                                      pids=list(map(int, exec_set))) as ksp:
+                    if not self._eval_traced:
+                        self._eval_traced = True
+                        ksp.set(first_call=True)
+                        with self.tracer.span("kernel.compile",
+                                              engine="traditional"):
+                            res = self._veval(entry.part, entry.g2l,
+                                              self.store.owner, plan_arrays,
+                                              np.int32(plan.n_steps),
+                                              in_rows, in_step, in_valid,
+                                              np.asarray(seeds, dtype=bool))
+                    else:
+                        res = self._veval(entry.part, entry.g2l,
+                                          self.store.owner, plan_arrays,
+                                          np.int32(plan.n_steps),
+                                          in_rows, in_step, in_valid,
+                                          np.asarray(seeds, dtype=bool))
+                    overflow = bool(np.any(np.asarray(res.overflow)))
+            if overflow:
                 raise RuntimeError("evaluator buffer overflow; raise cap")
             comp_rows = np.asarray(res.comp_rows)
             comp_n = np.asarray(res.comp_n)

@@ -221,6 +221,16 @@ def main() -> None:
                     help="check answers against the whole-graph oracle")
     ap.add_argument("--cap", type=int, default=16384)
     ap.add_argument("--json", default="", help="write a JSON report here")
+    ap.add_argument("--trace-out", default="", metavar="TRACE.json",
+                    help="record end-to-end spans (obs/trace.py) and write "
+                         "a Chrome trace-event file loadable in Perfetto / "
+                         "chrome://tracing; also enables the decision "
+                         "records tools/trace_report.py explains "
+                         "(heuristic rankings, admission verdicts)")
+    ap.add_argument("--metrics-out", default="", metavar="METRICS.prom",
+                    help="write the unified metrics registry "
+                         "(obs/metrics.py) in Prometheus text exposition "
+                         "format at exit")
     ap.add_argument("--profile-json", default="",
                     help="also write the workload profile alone here")
     ap.add_argument("--repartition-from", default="", metavar="PROFILE.json",
@@ -286,6 +296,9 @@ def main() -> None:
                          "robin from this comma-separated list")
     args = ap.parse_args()
 
+    from repro.obs import NULL_TRACER, Tracer
+    tracer = Tracer() if args.trace_out else NULL_TRACER
+
     t0 = time.time()
     if args.graph_dir:
         session = GraphSession.open(args.graph_dir,
@@ -297,7 +310,8 @@ def main() -> None:
                                     read_ahead=not args.no_read_ahead,
                                     processors=args.processors,
                                     prefetch=not args.no_prefetch,
-                                    seed=args.seed)
+                                    seed=args.seed,
+                                    tracer=tracer)
         graph = session.graph
         dqueries = load_queries(args.dataset, graph, args.seed)
         print(f"[serve] graph: {graph.n_nodes} nodes, {graph.n_edges} "
@@ -346,7 +360,8 @@ def main() -> None:
                                cache_parts=args.cache_parts,
                                processors=args.processors,
                                prefetch=not args.no_prefetch,
-                               seed=args.seed)
+                               seed=args.seed,
+                               tracer=tracer)
     gen0 = session.generation   # None for in-RAM sessions
     q = partition_quality(graph, session.pg.assignment, session.k)
     print(f"[serve] session: k={session.k} scheme={session.scheme} "
@@ -374,6 +389,7 @@ def main() -> None:
 
     throughput = None
     slo_report = None
+    sched_report = None
     if args.slo:
         from repro.serving import (Request, parse_slo_spec,
                                    requests_from_workload)
@@ -430,9 +446,10 @@ def main() -> None:
         print(f"[serve] workload: {len(wqueries)} queries from "
               f"{args.workload} via the shared scheduler "
               f"({args.shared_heuristic})")
-        report = session.submit_many(wqueries, max_answers=budgets,
-                                     heuristic=args.shared_heuristic,
-                                     fairness_gamma=args.fairness_gamma)
+        report = sched_report = session.submit_many(
+            wqueries, max_answers=budgets,
+            heuristic=args.shared_heuristic,
+            fairness_gamma=args.fairness_gamma)
         lat = [r.latency_s for r in report.results]
         qps = (len(report.results) / report.wall_s if report.wall_s else 0.0)
         throughput = {
@@ -585,13 +602,34 @@ def main() -> None:
               f"({cache['read_ahead_hits']} hit), "
               f"{cache['host_evictions']} host evictions")
 
+    # the unified metrics registry absorbs every subsystem's counters at
+    # exit (obs/metrics.py ingesters) — same numbers whether or not spans
+    # were recorded; --trace-out additionally dumps the span timeline
+    from repro.obs import (MetricsRegistry, ingest_schedule, ingest_session,
+                           observability_snapshot, write_chrome_trace,
+                           write_prometheus)
+    registry = MetricsRegistry()
+    ingest_session(registry, session)
+    if sched_report is not None:
+        ingest_schedule(registry, sched_report.loads,
+                        sched_report.batch_sizes)
+    if args.trace_out:
+        write_chrome_trace(tracer, args.trace_out)
+        print(f"[serve] wrote Chrome trace ({len(tracer.spans)} spans, "
+              f"{len(tracer.decisions)} decisions) to {args.trace_out}")
+    if args.metrics_out:
+        write_prometheus(registry, args.metrics_out)
+        print(f"[serve] wrote Prometheus metrics to {args.metrics_out}")
+
     if args.json or args.profile_json:
         # built once: the profile embeds two [V]-length arrays, so don't
         # materialize/serialize it separately per output file
         profile = session.workload_profile()
         if args.json:
-            rep = {"queries": records,
+            rep = {"schema_version": 2,
+                   "queries": records,
                    "cache": cache,
+                   "observability": observability_snapshot(tracer, registry),
                    "workload_profile": profile}
             if session.mutable:
                 rep["generations"] = {

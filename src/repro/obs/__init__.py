@@ -1,0 +1,37 @@
+"""Zero-dependency observability: span tracing, a unified metrics
+registry, and trace exporters.
+
+Three modules, one contract (docs/observability.md):
+
+  trace.py   — ``Tracer``: low-overhead span context managers with
+               ids/parents/monotonic timestamps/attributes, plus
+               *decision records* (heuristic score breakdowns, frontend
+               admission inputs).  The disabled path is ``NULL_TRACER``,
+               a no-op singleton hot loops pay ~nothing for.
+  metrics.py — ``MetricsRegistry``: counters/gauges/histograms that
+               absorb the ad-hoc counters scattered across the store,
+               host cache, delta layer, scheduler, and serving front
+               end into one exportable namespace.
+  export.py  — three exporters: Chrome trace-event JSON (Perfetto),
+               Prometheus text exposition, and a structured snapshot
+               merged into serve's JSON report.
+
+``tools/trace_report.py`` consumes the Chrome trace to answer "what
+dominated this query's latency?" and "why was P3 loaded before P1?"
+from the trace file alone.
+"""
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, \
+    ingest_frontend, ingest_load_stats, ingest_schedule, ingest_session, \
+    validate_residency
+from .trace import NULL_TRACER, NullTracer, Span, Tracer
+from .export import observability_snapshot, to_chrome_trace, \
+    to_prometheus_text, write_chrome_trace, write_prometheus
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Span",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "ingest_frontend", "ingest_load_stats", "ingest_schedule",
+    "ingest_session", "validate_residency",
+    "to_chrome_trace", "write_chrome_trace", "to_prometheus_text",
+    "write_prometheus", "observability_snapshot",
+]

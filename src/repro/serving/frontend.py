@@ -334,18 +334,48 @@ class ServingFrontend:
                     total += p.estimate.latency_s
             return total
 
-        def admit(pend: _Pending) -> None:
+        tracer = getattr(session, "tracer", None)
+        trace_on = tracer is not None and tracer.enabled
+
+        def record_decision(outcome: str, r: Request,
+                            slo: Optional[SLOClass],
+                            est: Optional[CostEstimate],
+                            reason: Optional[str] = None,
+                            qid: Optional[int] = None) -> None:
+            """One decision record per admission verdict: the predicted
+            latency, the backlog it queued behind, and the deadline it was
+            judged against — everything trace_report needs to replay WHY
+            a request was admitted/degraded/deferred/shed."""
+            if not trace_on:
+                return
+            tracer.decision(
+                "frontend.admit", query=r.query.name,
+                slo_class=slo.name if slo is not None else None,
+                outcome=outcome, reason=reason, qid=qid,
+                arrival_s=float(r.arrival_s),
+                predicted_latency_s=(float(est.latency_s)
+                                     if est is not None else None),
+                backlog_s=(backlog_s(slo.priority)
+                           if slo is not None else 0.0),
+                deadline_s=(float(slo.deadline_s)
+                            if slo is not None else None),
+                headroom=float(self.headroom))
+
+        def admit(pend: _Pending, outcome: str = "admit") -> None:
             r = pend.req
             pend.qid = sched.admit(r.query, max_answers=pend.max_answers)
             pend.admitted_round = rounds
             pend.arrive_wall = t0 + (r.arrival_s / speed if speed > 0 else 0.0)
             in_flight[pend.qid] = pend
             counters["admitted"] += 1
+            record_decision(outcome, r, pend.slo, pend.estimate,
+                            qid=pend.qid)
 
         def shed(idx: int, r: Request, slo: SLOClass, est: CostEstimate,
                  reason: str) -> None:
             counters["shed"] += 1
             shed_by_reason[reason] = shed_by_reason.get(reason, 0) + 1
+            record_decision("shed", r, slo, est, reason=reason)
             outcomes[idx] = RequestOutcome(
                 name=r.query.name, slo_class=slo.name, arrival_s=r.arrival_s,
                 status="shed", shed_reason=reason,
@@ -376,6 +406,7 @@ class ServingFrontend:
                 pend.estimate = est
                 deferred.append(pend)
                 counters["deferred"] += 1
+                record_decision("defer", r, slo, est, reason="deferrable")
                 return
             budget = slo.deadline_s * self.headroom
             finish_est = backlog_s(slo.priority) + est.latency_s
@@ -399,7 +430,7 @@ class ServingFrontend:
                     pend.estimate = est2
                     pend.max_answers = k2
                     counters["degraded"] += 1
-                    admit(pend)
+                    admit(pend, outcome="degrade")
                     outcomes_mark_degraded[pend.qid] = True
                     return
             if slo.sheddable:

@@ -400,7 +400,10 @@ class GenerationView:
         self._ensure_geometry()
         if pid in self._stale:
             from .format import _shard_arrays
-            arrs = _shard_arrays(self._rebuilt, pid)
+            with self.mdir.tracer.span("deltas.overlay_rebuild", pid=pid,
+                                       generation=int(self.generation),
+                                       seq=int(self.seq_for(pid))):
+                arrs = _shard_arrays(self._rebuilt, pid)
         else:
             part, g2l = self.catalog.read_part(pid)
             arrs = dict(part)
@@ -522,6 +525,10 @@ class MutableGraphDirectory:
         self._pins: Dict[int, List] = {}   # id(view) -> [view, refcount]
         self._lock = threading.RLock()
         self.compactions = 0
+        # observability: GraphSession.open swaps in its live tracer; the
+        # default no-op keeps standalone directory use untraced
+        from ..obs.trace import NULL_TRACER
+        self.tracer = NULL_TRACER
 
     # -- introspection ------------------------------------------------------
 
@@ -557,10 +564,12 @@ class MutableGraphDirectory:
     def _append(self, rec: DeltaRecord) -> DeltaRecord:
         # durable first (crash after this point keeps the record), then
         # the in-memory overlay
-        self.log.append(rec)
-        self._records.append(rec)
-        self._graph, self._assign = apply_records(self._graph, self._assign,
-                                                  [rec])
+        with self.tracer.span("deltas.append", op=str(rec.op),
+                              seq=int(rec.seq), touched=list(rec.touched)):
+            self.log.append(rec)
+            self._records.append(rec)
+            self._graph, self._assign = apply_records(
+                self._graph, self._assign, [rec])
         return rec
 
     def add_edge(self, u: int, v: int, label: str,
@@ -683,8 +692,11 @@ class MutableGraphDirectory:
         logs.  Crash after (3): the new generation is live and steps
         (4)/(5) re-run idempotently at the next open.
         """
-        with self._lock:
+        with self._lock, \
+                self.tracer.span("deltas.compact", pid=int(pid),
+                                 generation=int(self.generation)) as _csp:
             pid = int(pid)
+            _csp.set(pending=int(self.pending_counts()[pid]))
             view = GenerationView(self, self.catalog, tuple(self._records),
                                   self._graph, self._assign, self.max_seq())
             view._ensure_geometry()
@@ -763,6 +775,7 @@ class MutableGraphDirectory:
             # the new generation is live
             self.catalog = DiskCatalog(self.path, self.verify_checksums)
             self.compactions += 1
+            _csp.set(new_generation=int(self.generation))
             # (4) trim folded records, (5) GC unpinned superseded files
             self.log.trim(self.catalog.applied_seq,
                           [self.catalog.shard_seq(p)

@@ -94,7 +94,8 @@ class HostShardCache:
     def __init__(self, catalog, stats,
                  capacity_parts: Optional[int] = None,
                  capacity_bytes: Optional[int] = None,
-                 read_ahead: bool = True):
+                 read_ahead: bool = True,
+                 tracer=None):
         if capacity_parts is not None and capacity_parts < 1:
             raise ValueError(f"host capacity_parts must be >= 1, "
                              f"got {capacity_parts}")
@@ -106,6 +107,10 @@ class HostShardCache:
         self.capacity_parts = capacity_parts
         self.capacity_bytes = capacity_bytes
         self.read_ahead_enabled = read_ahead
+        if tracer is None:
+            from ..obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         self._cache: "OrderedDict[int, HostBundle]" = OrderedDict()
         self._pending: Dict[int, threading.Thread] = {}
         self._errors: Dict[int, BaseException] = {}
@@ -167,9 +172,12 @@ class HostShardCache:
                     self.stats.read_ahead_hits += 1
                 return got
         # demand read: disk on the critical path
-        self.stats.disk_reads += 1
-        bundle = (loader or self._default_loader(key))()
-        self.stats.bytes_disk += bundle.nbytes
+        with self.tracer.span("store.disk_read",
+                              pid=self._pid_of(key)) as sp:
+            self.stats.disk_reads += 1
+            bundle = (loader or self._default_loader(key))()
+            self.stats.bytes_disk += bundle.nbytes
+            sp.set(nbytes=bundle.nbytes)
         with self._lock:
             self._insert(key, bundle)
         return bundle
@@ -198,7 +206,14 @@ class HostShardCache:
 
         def _work() -> None:
             try:
-                bundle = load()
+                # span recorded from the worker thread: the tracer is
+                # thread-safe and the timebase is shared, so read-ahead
+                # I/O shows up in its own thread lane overlapping the
+                # main thread's eval spans
+                with self.tracer.span("store.read_ahead",
+                                      pid=self._pid_of(key)) as sp:
+                    bundle = load()
+                    sp.set(nbytes=bundle.nbytes)
                 with self._lock:
                     self._pending.pop(key, None)
                     self._insert(key, bundle)

@@ -1,0 +1,369 @@
+"""End-to-end observability (obs/): span tracer, unified metrics
+registry, exporters, decision records — and the contract that makes
+them safe to ship: tracing on/off yields byte-identical answers and
+RunStats on every engine, and the disabled path costs ~nothing.
+"""
+import json
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GraphSession, MAX_SN, MAX_YIELD,
+                        MAX_YIELD_SHARED, match_disjunctive,
+                        rank_partitions, rank_partitions_shared)
+from repro.data.generators import subgen_like_graph, subgen_queries
+from repro.obs import (NULL_TRACER, MetricsRegistry, Tracer,
+                       ingest_load_stats, ingest_schedule, ingest_session,
+                       observability_snapshot, to_chrome_trace,
+                       to_prometheus_text, validate_residency,
+                       write_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = subgen_like_graph(n_nodes=250, n_edges=700, n_embed=10, seed=3)
+    dqueries = subgen_queries(g)
+    refs = {dq.name: match_disjunctive(g, dq, q_pad=8) for dq in dqueries}
+    return g, dqueries, refs
+
+
+def make_session(g, engine="opat", k=4, **kw):
+    return GraphSession(g, k=k, scheme="kway_shem", engine=engine, seed=1,
+                        processors=2, config=EngineConfig(cap=32768), **kw)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_null_tracer_is_noop_singleton():
+    assert not NULL_TRACER.enabled
+    s1 = NULL_TRACER.span("a", x=1)
+    s2 = NULL_TRACER.span("b")
+    assert s1 is s2            # one shared span object, zero allocation
+    with s1 as sp:
+        assert sp.set(tier="cold") is sp   # chainable no-op
+    NULL_TRACER.decision("k", a=1)
+    NULL_TRACER.add_span("x", 0.0, 1.0)
+
+
+def test_tracer_span_nesting_and_ids():
+    tr = Tracer()
+    with tr.span("outer", a=1) as o:
+        with tr.span("inner") as i:
+            assert i.parent_id == o.span_id
+            assert tr.current_span_id == i.span_id
+        with tr.span("inner2") as i2:
+            assert i2.parent_id == o.span_id
+    assert o.parent_id is None
+    spans = tr.spans
+    assert [s.name for s in spans] == ["inner", "inner2", "outer"]
+    assert all(s.t1 is not None and s.t1 >= s.t0 for s in spans)
+    totals = tr.span_totals()
+    assert totals["inner"]["count"] == 1
+    tr.clear()
+    assert tr.spans == [] and tr.decisions == []
+
+
+def test_tracer_records_error_attr():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    assert tr.spans[0].attrs["error"] == "RuntimeError"
+
+
+def test_add_span_and_decisions():
+    tr = Tracer()
+    sp = tr.add_span("query", 1.0, 2.5, qid=7)
+    assert sp.t1 - sp.t0 == pytest.approx(1.5)
+    tr.decision("heuristic.rank", chosen=3, breakdown={3: {"score": 1.0}})
+    assert tr.decisions[0]["kind"] == "heuristic.rank"
+    assert tr.decisions[0]["chosen"] == 3
+    assert "ts" in tr.decisions[0]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_x_total", "help")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    c.set_total(10)           # ingestion: mirror an absolute source counter
+    assert c.value == 10
+    g = reg.gauge("repro_g", "help")
+    g.set(4.5)
+    h = reg.histogram("repro_lat_seconds", "help", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(99.0)           # overflow bucket
+    assert h.count == 3 and h.overflow == 1
+    assert h.cumulative() == [(0.1, 1), (1.0, 2)]
+    # same name+labels returns the same instrument; new labels a new one
+    assert reg.counter("repro_x_total", "help") is c
+    c2 = reg.counter("repro_x_total", "help", tier="cold")
+    assert c2 is not c
+    snap = reg.snapshot()
+    assert snap["repro_x_total"] == 10
+    assert snap['repro_x_total{tier=cold}'] == 0
+    assert snap["repro_lat_seconds"]["count"] == 3
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("repro_a_total", "a counter", tier="warm").inc(2)
+    h = reg.histogram("repro_d_seconds", "durations", buckets=(0.1, 1.0))
+    h.observe(0.5)
+    text = to_prometheus_text(reg)
+    assert "# TYPE repro_a_total counter" in text
+    assert 'repro_a_total{tier="warm"} 2' in text
+    # cumulative le buckets: 0 below 0.1, 1 at le=1.0 and at +Inf
+    assert 'repro_d_seconds_bucket{le="0.1"} 0' in text
+    assert 'repro_d_seconds_bucket{le="1"} 1' in text
+    assert 'repro_d_seconds_bucket{le="+Inf"} 1' in text
+    assert "repro_d_seconds_count 1" in text
+
+
+def test_validate_residency():
+    # prefetch hits are a subset of warm: cold + (warm-ph) + ph == n
+    out = validate_residency(2, 3, 1, 5)
+    assert out == {"cold": 2, "demand_warm": 2, "prefetch_hits": 1,
+                   "n_loads": 5}
+    with pytest.raises(ValueError):
+        validate_residency(2, 3, 1, 6)     # classes don't tile the loads
+    with pytest.raises(ValueError):
+        validate_residency(2, 1, 2, 3)     # ph > warm
+    with pytest.raises(ValueError):
+        validate_residency(None, 3, 1, 4)  # absent counter
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_export(tmp_path):
+    tr = Tracer()
+    with tr.span("query", query="Q1"):
+        with tr.span("store.load", pid=2) as sp:
+            sp.set(tier="cold")
+        with tr.span("kernel.eval", pid=2):
+            pass
+    tr.decision("heuristic.rank", chosen=2, ranked=[2],
+                breakdown={2: {"sni": 4, "score": 4.0}})
+    doc = to_chrome_trace(tr)
+    evs = doc["traceEvents"]
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(xs) == {"query", "store.load", "kernel.eval"}
+    # lanes: one tid per subsystem, named via M metadata events
+    lanes = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"queries", "store loads", "kernel eval"} <= lanes
+    assert xs["store.load"]["tid"] != xs["query"]["tid"]
+    # parenting survives the export (trace_report rebuilds the tree)
+    assert xs["store.load"]["args"]["parent_id"] == \
+        xs["query"]["args"]["span_id"]
+    assert xs["store.load"]["args"]["tier"] == "cold"
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert inst[0]["name"] == "heuristic.rank"
+    assert inst[0]["args"]["breakdown"]["2"]["score"] == 4.0
+    p = tmp_path / "t.json"
+    write_chrome_trace(tr, str(p))
+    assert json.loads(p.read_text())["traceEvents"]
+
+
+def test_observability_snapshot_shape():
+    tr = Tracer()
+    with tr.span("query", query="Q"):
+        pass
+    tr.decision("frontend.admit", outcome="admit")
+    reg = MetricsRegistry()
+    reg.counter("repro_c_total", "h").inc()
+    block = observability_snapshot(tr, reg)
+    assert block["enabled"] is True
+    assert block["metrics"]["repro_c_total"] == 1
+    assert block["spans"]["query"]["count"] == 1
+    assert block["decisions"]["frontend.admit"] == 1
+    off = observability_snapshot(NULL_TRACER, reg)
+    assert off["enabled"] is False and "spans" not in off
+
+
+# ---------------------------------------------------------------------------
+# decision records
+# ---------------------------------------------------------------------------
+
+def test_rank_partitions_decision_breakdown():
+    rng = np.random.default_rng(0)
+    tr = Tracer()
+    ranked = rank_partitions(MAX_SN, [0, 1, 2], {0: 5, 1: 9, 2: 1}, rng,
+                             tracer=tr)
+    rec = tr.decisions[0]
+    assert rec["kind"] == "heuristic.rank"
+    assert rec["chosen"] == ranked[0] == 1
+    # chosen is the argmax of the recorded scores (what --check verifies)
+    scores = {p: b["score"] for p, b in rec["breakdown"].items()}
+    assert max(scores, key=scores.get) == 1
+    rng2 = np.random.default_rng(0)
+    tr2 = Tracer()
+    rank_partitions(MAX_YIELD, [0, 1], {0: 10, 1: 10}, rng2,
+                    completion_rates={0: 0.1, 1: 0.9}, tracer=tr2)
+    b = tr2.decisions[0]["breakdown"]
+    assert b[1]["completion_rate"] == pytest.approx(0.9)
+    assert b[1]["score"] > b[0]["score"]
+
+
+def test_rank_partitions_shared_decision_terms():
+    rng = np.random.default_rng(0)
+    tr = Tracer()
+    waiting = {0: [(10, 0.5, 3.0, 0.0)], 1: [(2, 0.5, 0.0, 8.0)]}
+    rank_partitions_shared(MAX_YIELD_SHARED, waiting, rng,
+                           fairness_gamma=0.5, tracer=tr)
+    b = tr.decisions[0]["breakdown"]
+    # every term of the score is recorded separately
+    assert b[0]["base"] == pytest.approx(5.0)       # 10 x 0.5
+    assert b[0]["fairness"] == pytest.approx(15.0)  # 0.5 x 10 x 3
+    assert b[1]["urgency"] == pytest.approx(16.0)   # 2 x 8
+    for pid in (0, 1):
+        assert b[pid]["score"] == pytest.approx(
+            b[pid]["base"] + b[pid]["fairness"] + b[pid]["urgency"])
+
+
+# ---------------------------------------------------------------------------
+# parity: tracing on/off is invisible to results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,k", [("opat", 4), ("traditional", 4),
+                                      ("mapreduce", 1)])
+def test_traced_untraced_parity(setup, engine, k):
+    g, dqueries, refs = setup
+    plain = make_session(g, engine=engine, k=k)
+    traced = make_session(g, engine=engine, k=k, tracer=Tracer())
+    for dq in dqueries:
+        r0 = plain.submit(dq, max_answers=5)
+        r1 = traced.submit(dq, max_answers=5)
+        assert np.array_equal(r0.answers, r1.answers), (engine, dq.name)
+        for s0, s1 in zip(r0.stats, r1.stats):
+            assert s0.loads == s1.loads
+            assert s0.n_answers == s1.n_answers
+            assert s0.iterations == s1.iterations
+    assert traced.tracer.spans, "traced session recorded nothing"
+
+
+def test_traced_untraced_parity_shared_scheduler(setup):
+    g, dqueries, refs = setup
+    plain = make_session(g)
+    traced = make_session(g, tracer=Tracer())
+    rep0 = plain.submit_many(dqueries, heuristic=MAX_YIELD_SHARED)
+    rep1 = traced.submit_many(dqueries, heuristic=MAX_YIELD_SHARED)
+    assert rep0.loads == rep1.loads
+    assert rep0.batch_sizes == rep1.batch_sizes
+    for q0, q1 in zip(rep0.results, rep1.results):
+        assert q0.name == q1.name
+        assert np.array_equal(q0.answers, q1.answers)
+    names = {s.name for s in traced.tracer.spans}
+    assert "scheduler.round" in names and "kernel.eval" in names
+    # one externally-timed root span per retired query
+    assert sum(1 for s in traced.tracer.spans if s.name == "query") == \
+        len(rep1.results)
+    kinds = {d["kind"] for d in traced.tracer.decisions}
+    assert "heuristic.rank_shared" in kinds
+
+
+def test_disabled_tracer_overhead_under_5pct(setup):
+    """The null-path cost of every span a traced scheduler batch would
+    emit must stay under 5% of the batch's wall time."""
+    g, dqueries, refs = setup
+    traced = make_session(g, tracer=Tracer())
+    traced.submit_many(dqueries)                       # warm compile
+    t0 = time.perf_counter()
+    traced.submit_many(dqueries)
+    wall = time.perf_counter() - t0
+    n_events = len(traced.tracer.spans) + len(traced.tracer.decisions)
+    reps = 20000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with NULL_TRACER.span("scheduler.round", pid=1, round=2) as sp:
+            sp.set(tier="warm")
+    per_span = (time.perf_counter() - t0) / reps
+    assert n_events * per_span < 0.05 * wall, \
+        (n_events, per_span, wall)
+
+
+# ---------------------------------------------------------------------------
+# ingestion + trace_report CLI
+# ---------------------------------------------------------------------------
+
+def test_ingest_session_and_schedule(setup):
+    g, dqueries, refs = setup
+    sess = make_session(g)
+    rep = sess.submit_many(dqueries)
+    reg = MetricsRegistry()
+    ingest_session(reg, sess)
+    ingest_schedule(reg, rep.loads, rep.batch_sizes)
+    snap = reg.snapshot()
+    ls = sess.load_stats
+    assert snap["repro_store_cold_loads_total"] == ls.cold_loads
+    assert snap["repro_store_warm_loads_total"] == ls.warm_loads
+    assert snap["repro_scheduler_loads_total"] == len(rep.loads)
+    assert snap["repro_session_queries_served_total"] >= len(dqueries)
+    reg2 = MetricsRegistry()
+    ingest_load_stats(reg2, ls)
+    assert reg2.snapshot()["repro_store_cold_loads_total"] == ls.cold_loads
+
+
+def test_trace_report_check_cli(setup, tmp_path):
+    g, dqueries, refs = setup
+    sess = make_session(g, tracer=Tracer())
+    for dq in dqueries:
+        sess.submit(dq, max_answers=5)
+    path = tmp_path / "trace.json"
+    write_chrome_trace(sess.tracer, str(path))
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, "tools/trace_report.py", str(path), "--check"],
+        cwd=root, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "trace OK" in out.stdout
+    # the full report renders the latency decomposition
+    out2 = subprocess.run(
+        [sys.executable, "tools/trace_report.py", str(path)],
+        cwd=root, capture_output=True, text=True)
+    assert out2.returncode == 0, out2.stderr
+    assert "store.load" in out2.stdout
+    # a broken trace (span escaping its parent) fails the gate
+    doc = json.loads(path.read_text())
+    for e in doc["traceEvents"]:
+        if e.get("ph") == "X" and e["args"].get("parent_id") is not None:
+            e["ts"] += 10_000_000.0
+            break
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    out3 = subprocess.run(
+        [sys.executable, "tools/trace_report.py", str(bad), "--check"],
+        cwd=root, capture_output=True, text=True)
+    assert out3.returncode != 0
+    assert "escapes parent" in out3.stderr
+
+
+def test_frontend_admission_decisions(setup):
+    from repro.serving import Request, parse_slo_spec
+    g, dqueries, refs = setup
+    sess = make_session(g, tracer=Tracer())
+    classes = parse_slo_spec("interactive=0.5,batch=5")
+    fe = sess.frontend(slo_classes=classes, shed_policy="predictive")
+    reqs = [Request(dq, slo_class="interactive") for dq in dqueries]
+    fe.serve(reqs)
+    recs = [d for d in sess.tracer.decisions
+            if d["kind"] == "frontend.admit"]
+    assert len(recs) == len(reqs)
+    for r in recs:
+        assert r["outcome"] in ("admit", "degrade", "defer", "shed")
+        assert "predicted_latency_s" in r and "deadline_s" in r
+        assert "backlog_s" in r

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.metrics import (RunStats, avg_load_ratio_across_schemes,
-                                avg_load_ratio_for_batch)
+                                avg_load_ratio_for_batch,
+                                validate_run_residency)
 from repro.core.query import OP_EQ, OP_NE, OP_NONE
 from repro.core.state import BindingBatch, QueryState, apply_value_op
 
@@ -53,3 +54,36 @@ def test_load_ratio_measures():
     assert avg_load_ratio_across_schemes(stats, "Q1", "max-sn") == pytest.approx(0.75)
     # h(D)^{fast}_{qbatch} = mean(1.0, 1.0) = 1.0
     assert avg_load_ratio_for_batch(stats, "fast", "max-sn") == pytest.approx(1.0)
+
+
+def test_run_stats_residency_invariant():
+    # residency classes must tile the load sequence: cold + demand-warm +
+    # prefetch-hit == n_loads (warm INCLUDES prefetch hits in the store's
+    # accounting, so demand_warm = warm - prefetch_hits)
+    ok = RunStats("Q", "fast", "max-sn", loads=[0, 1, 1, 2], l_ideal=2,
+                  n_answers=1, cold_loads=3, warm_loads=1, prefetch_hits=1)
+    out = validate_run_residency(ok)
+    assert out == {"cold": 3, "demand_warm": 0, "prefetch_hits": 1,
+                   "n_loads": 4}
+
+    # hand-built RunStats without counters: nothing to validate
+    bare = RunStats("Q", "fast", "max-sn", loads=[0, 1], l_ideal=2,
+                    n_answers=1)
+    assert validate_run_residency(bare) is None
+
+    # a load path that skipped the counters is an instrumentation bug
+    bad = RunStats("Q", "fast", "max-sn", loads=[0, 1, 1], l_ideal=2,
+                   n_answers=1, cold_loads=1, warm_loads=1, prefetch_hits=0)
+    with pytest.raises(ValueError):
+        validate_run_residency(bad)
+
+    # TraditionalMP's load unit is the stacked bundle (p pids per store
+    # get): skip the n_loads equality, keep the internal checks
+    tmp = RunStats("Q", "fast", "max-sn", loads=[0, 1, 0, 1], l_ideal=2,
+                   n_answers=1, cold_loads=1, warm_loads=1, prefetch_hits=0)
+    assert validate_run_residency(tmp, per_partition_loads=False) is not None
+    with pytest.raises(ValueError):   # prefetch_hits > warm is always wrong
+        validate_run_residency(
+            RunStats("Q", "fast", "max-sn", loads=[0], l_ideal=1,
+                     n_answers=0, cold_loads=0, warm_loads=1,
+                     prefetch_hits=2), per_partition_loads=False)
