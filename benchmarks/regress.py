@@ -1,0 +1,179 @@
+"""Continuous perf-regression detection over bench_trajectory.json.
+
+    PYTHONPATH=src python -m benchmarks.regress \
+        --trajectory bench_trajectory.json --check-regression
+
+track.py's gate compares one run against the single last committed
+BENCH_*.json — good at catching a cliff, blind to slow drift and jumpy
+on a noisy runner.  This module reads the whole trajectory instead and
+asks, per tracked metric: is the newest point worse than an EWMA
+baseline of its history by more than a noise-aware band?
+
+  baseline  EWMA of every usable point before the newest (alpha 0.3:
+            recent runs dominate, old points still anchor), so a
+            months-long 3%/week drift eventually exits the band even
+            though no single step ever trips a pairwise gate.
+  band      max(z * sigma, rel_tol * |baseline|, abs_floor) where sigma
+            prefers the *measured* across-trial stddev recorded by
+            ``track.py --trials`` and falls back to the history's sample
+            stddev.  The relative and absolute floors keep one-trial
+            trajectories on shared CI runners from gating on jitter.
+  verdict   a metric regresses only in its bad direction (p95 up, qps
+            down, loads-per-query up, disk reads up, kernel speedup
+            down); fewer than 2 usable points passes with a note —
+            a new metric must accrue history before it can gate.
+
+``kernel_speedup`` points are usable only off-CPU (interpret-mode Pallas
+on CPU measures the interpreter, not the kernel; track.py records None
+there) — so CPU-only CI never gates on it.
+
+Exit status: 0 unless ``--check-regression`` is set and at least one
+metric regressed.  Everything is importable (``ewma``, ``detect``) for
+the unit tests in tests/test_profiling.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+# newest-vs-baseline must exceed this relative band ...
+REL_TOL = 0.20
+# ... and z standard deviations of measured/ historical noise ...
+Z_SCORE = 3.0
+# ... and the metric's absolute floor (units of the metric itself)
+EWMA_ALPHA = 0.3
+
+# metric -> (bad direction, absolute noise floor, recorded-stddev key)
+METRICS: Dict[str, Dict[str, Any]] = {
+    "shared_b8_p95_ms": {
+        "worse": "higher", "abs_floor": 75.0,
+        "std_key": "shared_b8_p95_ms_std"},
+    "shared_b8_qps": {
+        "worse": "lower", "abs_floor": 0.5,
+        "std_key": "shared_b8_qps_std"},
+    "shared_b8_loads_per_query": {
+        "worse": "higher", "abs_floor": 0.05, "std_key": None},
+    "oocore_disk_reads": {
+        "worse": "higher", "abs_floor": 1.0, "std_key": None},
+    "kernel_speedup": {
+        "worse": "lower", "abs_floor": 0.05, "std_key": None},
+}
+
+
+def ewma(values: List[float], alpha: float = EWMA_ALPHA) -> float:
+    """Exponentially weighted moving average, oldest first."""
+    if not values:
+        raise ValueError("ewma of an empty series")
+    m = float(values[0])
+    for v in values[1:]:
+        m = alpha * float(v) + (1.0 - alpha) * m
+    return m
+
+
+def _usable(traj: List[Dict], metric: str) -> List[Tuple[Dict, float]]:
+    """(point, value) pairs carrying this metric, trajectory order."""
+    out = []
+    for pt in traj:
+        v = pt.get(metric)
+        if v is None:
+            continue
+        if metric == "kernel_speedup" and pt.get("kernel_backend") == "cpu":
+            continue   # belt and braces: track.py already records None
+        out.append((pt, float(v)))
+    return out
+
+
+def detect(traj: List[Dict], *, rel_tol: float = REL_TOL,
+           z: float = Z_SCORE, alpha: float = EWMA_ALPHA) -> List[Dict]:
+    """One finding per tracked metric over a trajectory (oldest first):
+    ``{"metric", "status" ("ok"|"regression"|"skipped"), "value",
+    "baseline", "band", "note"}``."""
+    traj = sorted(traj, key=lambda p: str(p.get("utc_date", "")))
+    findings: List[Dict] = []
+    for metric, spec in METRICS.items():
+        pts = _usable(traj, metric)
+        if len(pts) < 2:
+            findings.append({
+                "metric": metric, "status": "skipped", "value": None,
+                "baseline": None, "band": None,
+                "note": f"{len(pts)} usable point(s); need 2 to gate"})
+            continue
+        hist = [v for _, v in pts[:-1]]
+        cur_pt, cur = pts[-1]
+        base = ewma(hist, alpha)
+        # noise estimate: measured across-trial stddev when any point
+        # recorded one (multi-trial runs), else the history's own spread
+        std_key = spec["std_key"]
+        measured = [float(pt[std_key]) for pt, _ in pts
+                    if std_key and pt.get(std_key) is not None]
+        if measured:
+            sigma = max(measured)
+        elif len(hist) >= 2:
+            sigma = statistics.stdev(hist)
+        else:
+            sigma = 0.0
+        band = max(z * sigma, rel_tol * abs(base), spec["abs_floor"])
+        if spec["worse"] == "higher":
+            regressed = cur > base + band
+        else:
+            regressed = cur < base - band
+        findings.append({
+            "metric": metric,
+            "status": "regression" if regressed else "ok",
+            "value": cur, "baseline": round(base, 4),
+            "band": round(band, 4),
+            "note": f"{len(pts)} points through {cur_pt.get('utc_date')}"
+                    + (f"; sigma={sigma:.4g}"
+                       + (" (measured)" if measured else " (history)")
+                       if sigma else "")})
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trajectory", default="bench_trajectory.json",
+                    help="track.py's per-run summary series")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="CI gate: exit non-zero when any tracked metric "
+                         "drifts out of its EWMA noise band")
+    ap.add_argument("--rel-tol", type=float, default=REL_TOL)
+    ap.add_argument("--z", type=float, default=Z_SCORE)
+    ap.add_argument("--alpha", type=float, default=EWMA_ALPHA)
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trajectory) as f:
+            traj = json.load(f)
+    except FileNotFoundError:
+        print(f"regress: no trajectory at {args.trajectory}; nothing to "
+              f"gate (run benchmarks.track first)")
+        return 0
+    if not isinstance(traj, list):
+        print(f"regress: {args.trajectory} is not a JSON list",
+              file=sys.stderr)
+        return 2
+
+    findings = detect(traj, rel_tol=args.rel_tol, z=args.z,
+                      alpha=args.alpha)
+    print(f"== trajectory regression check ({len(traj)} points, "
+          f"{args.trajectory}) ==")
+    for f_ in findings:
+        mark = {"ok": "PASS", "regression": "FAIL",
+                "skipped": "skip"}[f_["status"]]
+        detail = (f"value={f_['value']} baseline={f_['baseline']} "
+                  f"band=+/-{f_['band']}  " if f_["value"] is not None
+                  else "")
+        print(f"  [{mark}] {f_['metric']:<28} {detail}({f_['note']})")
+    regressions = [f_ for f_ in findings if f_["status"] == "regression"]
+    if regressions and args.check_regression:
+        print(f"regress: {len(regressions)} metric(s) outside the EWMA "
+              f"noise band", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

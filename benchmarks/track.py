@@ -22,7 +22,12 @@ Schema (version 1):
 
 (p99_ms joined within schema v1: the gate guards each timing key with a
 presence check, so points committed before the key exists still compare
-on the keys they have.)
+on the keys they have.  ``--trials N`` repeats the sweeps: timing keys
+become across-trial means with ``<key>_std`` sample stddevs and the
+point records ``n_trials`` — measured variance the EWMA regression
+detector in benchmarks/regress.py sizes its noise bands from.  The
+trajectory keeps ONE point per utc_date: a re-run replaces that day's
+entry instead of double-weighting it.)
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import datetime
 import glob
 import json
 import os
+import statistics
 import sys
 import time
 from typing import Dict, List, Optional
@@ -160,13 +166,56 @@ def _collect_roofline(dryrun_dir: str) -> Dict:
                 note=None if available else note.strip())
 
 
-def collect(seed: int = 0, dryrun_dir: str = "results/dryrun") -> Dict:
+# phase keys whose values are timing measurements (noisy across trials);
+# everything else in a phase dict is a deterministic counter and must be
+# identical on every trial of the same seed
+_TIMING_KEYS = ("p50_ms", "p95_ms", "p99_ms", "qps", "ref_ms", "fused_ms")
+
+
+def _merge_trials(runs: List[List[Dict]], id_keys: List[str]) -> List[Dict]:
+    """Fold N trials of one sweep into its first trial's phase list:
+    timing keys become the across-trial mean plus a ``<key>_std`` sample
+    stddev; deterministic counters must agree across trials (same seed →
+    same schedule) and a mismatch aborts — that's a real nondeterminism
+    bug, not noise."""
+    base = [dict(p) for p in runs[0]]
+    if len(runs) == 1:
+        return base
+    for i, p in enumerate(base):
+        for k in list(p):
+            if k in _TIMING_KEYS:
+                vals = [float(r[i][k]) for r in runs]
+                p[k] = round(statistics.mean(vals), 3)
+                p[k + "_std"] = round(statistics.stdev(vals), 3)
+            elif k not in id_keys and any(r[i].get(k) != p[k]
+                                          for r in runs[1:]):
+                sys.exit(f"track: counter {k!r} diverged across trials of "
+                         f"the same seed ({[r[i].get(k) for r in runs]}) — "
+                         f"nondeterministic scheduling")
+    return base
+
+
+def collect(seed: int = 0, dryrun_dir: str = "results/dryrun",
+            trials: int = 1) -> Dict:
+    trials = max(1, int(trials))
+    shared = _merge_trials([_collect_shared(seed) for _ in range(trials)],
+                           ["mode", "batch"])
+    oocore = _merge_trials([_collect_oocore(seed) for _ in range(trials)],
+                           ["mode"])
+    kruns = [_collect_kernel(seed) for _ in range(trials)]
+    # "speedup" is derived from timing, so it rides the id-key exemption
+    # and is recomputed from the merged means below
+    kernel = _merge_trials([[k] for k in kruns],
+                           ["shape", "backend", "speedup"])[0]
+    if trials > 1 and kernel.get("fused_ms"):
+        kernel["speedup"] = round(kernel["ref_ms"] / kernel["fused_ms"], 4)
     return {
         "schema_version": SCHEMA_VERSION,
         "utc_date": _utc_date(),
-        "shared": _collect_shared(seed),
-        "oocore": _collect_oocore(seed),
-        "kernel": _collect_kernel(seed),
+        "n_trials": trials,
+        "shared": shared,
+        "oocore": oocore,
+        "kernel": kernel,
         "roofline": _collect_roofline(dryrun_dir),
     }
 
@@ -245,28 +294,52 @@ def last_committed(baseline_dir: str, exclude: Optional[str] = None) -> Optional
 # -- trajectory --------------------------------------------------------------
 
 def summary_point(point: Dict) -> Dict:
-    """The compact per-run record appended to bench_trajectory.json."""
+    """The compact per-run record appended to bench_trajectory.json.
+
+    ``kernel_speedup`` is recorded only off-CPU: interpret-mode Pallas on
+    CPU is a correctness path, so its ratio tracks interpreter overhead,
+    not the kernel — comparing it across runs would gate on noise about
+    the wrong thing (``kernel_backend`` still records where the point
+    ran).  Timing metrics carry their across-trial stddev when the run
+    measured more than one trial, so the regression detector
+    (benchmarks/regress.py) can size its noise band from measured
+    variance instead of guessing."""
     shared8 = next((p for p in point["shared"]
                     if p["mode"] == "shared" and p["batch"] == 8), None)
     ooc = next((p for p in point["oocore"] if p["mode"] == "out-of-core"),
                None)
-    return {
+    backend = point["kernel"].get("backend")
+    out = {
         "utc_date": point["utc_date"],
         "schema_version": point["schema_version"],
+        "n_trials": point.get("n_trials", 1),
         "shared_b8_loads_per_query": (shared8 or {}).get("loads_per_query"),
         "shared_b8_qps": (shared8 or {}).get("qps"),
+        "shared_b8_p95_ms": (shared8 or {}).get("p95_ms"),
         "oocore_disk_reads": (ooc or {}).get("disk_reads"),
-        "kernel_speedup": point["kernel"]["speedup"],
-        "kernel_backend": point["kernel"]["backend"],
+        "kernel_speedup": (point["kernel"]["speedup"]
+                           if backend != "cpu" else None),
+        "kernel_backend": backend,
     }
+    for src, dst in (("qps_std", "shared_b8_qps_std"),
+                     ("p95_ms_std", "shared_b8_p95_ms_std")):
+        if shared8 and src in shared8:
+            out[dst] = shared8[src]
+    return out
 
 
 def append_trajectory(path: str, point: Dict) -> None:
+    """Append this run's summary — replacing, not duplicating, any entry
+    already recorded for the same ``utc_date`` (re-runs within a day
+    would otherwise double-weight that day in every EWMA/variance the
+    regression detector computes)."""
     traj: List[Dict] = []
     if os.path.exists(path):
         with open(path) as f:
             traj = json.load(f)
-    traj.append(summary_point(point))
+    sp = summary_point(point)
+    traj = [t for t in traj if t.get("utc_date") != sp["utc_date"]]
+    traj.append(sp)
     with open(path, "w") as f:
         json.dump(traj, f, indent=2)
         f.write("\n")
@@ -284,12 +357,18 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="repo-root trajectory file to append to")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trials", type=int, default=1,
+                    help="repeat each sweep N times: timing metrics "
+                         "record their across-trial mean + stddev "
+                         "(deterministic counters must agree), giving "
+                         "the regression detector a measured noise band")
     ap.add_argument("--no-gate", action="store_true",
                     help="collect + emit but never fail on regression")
     args = ap.parse_args(argv)
 
     print("== benchmark trajectory point (smoke size) ==", flush=True)
-    point = collect(seed=args.seed, dryrun_dir=args.dryrun_dir)
+    point = collect(seed=args.seed, dryrun_dir=args.dryrun_dir,
+                    trials=args.trials)
 
     os.makedirs(args.out_dir, exist_ok=True)
     out_path = os.path.join(args.out_dir,

@@ -89,7 +89,8 @@ class MapReduceMPEngine:
                  heuristic: str = MAX_SN,
                  max_outer_iters: int = 4096,
                  store: Optional[PartitionStore] = None,
-                 tracer=None):
+                 tracer=None,
+                 profiler=None):
         self.pg = pg
         self.mesh = mesh
         self.cfg = cfg or EngineConfig()
@@ -114,6 +115,8 @@ class MapReduceMPEngine:
         self._part_sharding = NamedSharding(mesh, P(mesh.axis_names[0]))
         from ..obs.trace import NULL_TRACER
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        from ..obs.profile import NULL_PROFILER
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
         self._eval_traced = False
 
     # -- the SPMD program ----------------------------------------------------
@@ -412,6 +415,11 @@ class MapReduceMPEngine:
             if not self._eval_traced:
                 self._eval_traced = True
                 ksp.set(first_call=True)
+                self.profiler.attribute_kernel(
+                    ("mapreduce", "eval"), self._compiled, entry.part,
+                    entry.g2l, self.store.owner, plan_arrays,
+                    np.int32(plan.n_steps), np.int32(seed),
+                    np.int32(min(dev_budget, int(_NO_BUDGET))))
                 with self.tracer.span("kernel.compile", engine="mapreduce"):
                     out = self._compiled(
                         entry.part, entry.g2l, self.store.owner, plan_arrays,
@@ -425,6 +433,8 @@ class MapReduceMPEngine:
             faa, faa_n, overflow, iters, exhausted, comp, spawn = out
             faa = np.asarray(faa)          # device sync inside the span
             faa_n = np.asarray(faa_n)
+            self.profiler.stamp_kernel(ksp, ("mapreduce", "eval"))
+            self.profiler.sample_device(ksp, self.store)
         if bool(np.asarray(overflow).any()):
             raise RuntimeError(
                 "MapReduceMP buffer overflow; raise cap/quota")
@@ -444,7 +454,11 @@ class MapReduceMPEngine:
                          warm_loads=delta.warm_loads,
                          prefetch_hits=delta.prefetch_hits,
                          disk_reads=delta.disk_reads,
-                         read_ahead_hits=delta.read_ahead_hits)
+                         read_ahead_hits=delta.read_ahead_hits,
+                         bytes_cold=delta.bytes_cold,
+                         bytes_prefetched=delta.bytes_prefetched,
+                         bytes_disk=delta.bytes_disk,
+                         bytes_host=delta.bytes_host)
         return MapReduceMPResult(
             answers=answers, stats=stats, n_iterations=n_iter,
             completed_from=np.asarray(comp).astype(np.int64).reshape(-1),

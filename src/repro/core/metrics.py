@@ -53,6 +53,15 @@ class RunStats:
     # Zero for in-RAM sessions; None on hand-built RunStats.
     disk_reads: Optional[int] = None
     read_ahead_hits: Optional[int] = None
+    # byte flows for this run (PartitionStore / host tier accounting):
+    # bytes_cold moved host->device on the critical path, bytes_prefetched
+    # moved off it, bytes_disk came off the disk tier (demand + read-ahead),
+    # bytes_host were served out of the host LRU to device staging.  None on
+    # hand-built RunStats; engines fill them from the store-stats delta.
+    bytes_cold: Optional[int] = None
+    bytes_prefetched: Optional[int] = None
+    bytes_disk: Optional[int] = None
+    bytes_host: Optional[int] = None
     # streaming updates (storage/deltas.py): the graph generation this run
     # was pinned to — every load above resolved against that generation's
     # snapshot, even if a compaction published a newer one mid-run.  None
@@ -90,17 +99,48 @@ def validate_run_residency(stats: RunStats,
     unit is the stacked top-p bundle (one get per iteration, p entries in
     ``loads``) and MapReduceMP keeps every partition resident
     (``loads == []``), so for those engines the equality doesn't apply.
+
+    When the run also carries byte counters (PR 10 memory accounting),
+    they are cross-checked against the load counts: a residency class
+    with loads must have moved bytes and vice versa (cold_loads > 0 iff
+    bytes_cold > 0, disk_reads > 0 iff bytes_disk > 0, ...) — partitions
+    are padded arrays, so a zero-byte load means a counter path was
+    skipped.  Byte fields left ``None`` are not checked.
     """
     if stats.cold_loads is None or stats.warm_loads is None \
             or stats.prefetch_hits is None:
         return None
     from ..obs.metrics import validate_residency
     if per_partition_loads:
-        return validate_residency(stats.cold_loads, stats.warm_loads,
-                                  stats.prefetch_hits, stats.n_loads)
-    return validate_residency(stats.cold_loads, stats.warm_loads,
-                              stats.prefetch_hits,
-                              stats.cold_loads + stats.warm_loads)
+        out = validate_residency(stats.cold_loads, stats.warm_loads,
+                                 stats.prefetch_hits, stats.n_loads)
+    else:
+        out = validate_residency(stats.cold_loads, stats.warm_loads,
+                                 stats.prefetch_hits,
+                                 stats.cold_loads + stats.warm_loads)
+    byte_checks = (
+        ("cold_loads", stats.cold_loads, "bytes_cold", stats.bytes_cold),
+        ("disk_reads", stats.disk_reads, "bytes_disk", stats.bytes_disk),
+    )
+    for cname, count, bname, nbytes in byte_checks:
+        if count is None or nbytes is None:
+            continue
+        if int(nbytes) < 0:
+            raise ValueError(f"negative byte counter: {bname}={nbytes}")
+        if (int(count) > 0) != (int(nbytes) > 0):
+            raise ValueError(
+                f"{cname}={count} but {bname}={nbytes}: a residency "
+                f"class with loads must have moved bytes (and vice "
+                f"versa) — a byte-accounting path was skipped")
+        out[bname] = int(nbytes)
+    for bname, nbytes in (("bytes_prefetched", stats.bytes_prefetched),
+                          ("bytes_host", stats.bytes_host)):
+        if nbytes is None:
+            continue
+        if int(nbytes) < 0:
+            raise ValueError(f"negative byte counter: {bname}={nbytes}")
+        out[bname] = int(nbytes)
+    return out
 
 
 def l_ideal_for_plan(pg: PartitionedGraph, plan: Plan) -> int:

@@ -82,7 +82,8 @@ class OPATEngine:
     def __init__(self, pg: PartitionedGraph, cfg: Optional[EngineConfig] = None,
                  store: Optional[PartitionStore] = None,
                  prefetch: bool = True,
-                 tracer: Optional[Any] = None):
+                 tracer: Optional[Any] = None,
+                 profiler: Optional[Any] = None):
         self.pg = pg
         self.cfg = cfg or EngineConfig()
         assert pg.node_pad > 0, "build_partitions(uniform_pad=True) required"
@@ -93,6 +94,8 @@ class OPATEngine:
         self.prefetch = prefetch
         from ..obs.trace import NULL_TRACER
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        from ..obs.profile import NULL_PROFILER
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
         # flips after the first kernel call so the jit compile shows up as
         # a one-off "kernel.compile" child span, not steady-state eval time
         self._eval_traced = False
@@ -141,6 +144,11 @@ class OPATEngine:
                     # steady-state eval time reads clean
                     self._eval_traced = True
                     ksp.set(first_call=True)
+                    self.profiler.attribute_kernel(
+                        ("opat", "eval"), self._eval, entry.part, entry.g2l,
+                        self.store.owner, plan_arrays, np.int32(n_steps),
+                        in_rows, in_step, in_valid,
+                        np.bool_(seed_fresh and ci == 0))
                     with self.tracer.span("kernel.compile", engine="opat"):
                         res = self._eval(entry.part, entry.g2l,
                                          self.store.owner,
@@ -153,6 +161,8 @@ class OPATEngine:
                                      in_rows, in_step, in_valid,
                                      np.bool_(seed_fresh and ci == 0))
                 overflow = bool(res.overflow)   # device sync inside the span
+                self.profiler.stamp_kernel(ksp, ("opat", "eval"))
+                self.profiler.sample_device(ksp, self.store)
             if overflow:
                 raise RuntimeError(
                     f"evaluator buffer overflow on partition {pid}; raise "
@@ -225,7 +235,11 @@ class OPATEngine:
                          warm_loads=delta.warm_loads,
                          prefetch_hits=delta.prefetch_hits,
                          disk_reads=delta.disk_reads,
-                         read_ahead_hits=delta.read_ahead_hits)
+                         read_ahead_hits=delta.read_ahead_hits,
+                         bytes_cold=delta.bytes_cold,
+                         bytes_prefetched=delta.bytes_prefetched,
+                         bytes_disk=delta.bytes_disk,
+                         bytes_host=delta.bytes_host)
         return OPATResult(answers=answers, stats=stats, state=st)
 
     def run_request(self, req: RunRequest) -> RunReport:

@@ -180,6 +180,8 @@ class QueryScheduler:
         self.store = session.store
         from ..obs.trace import NULL_TRACER
         self.tracer = getattr(session, "tracer", None) or NULL_TRACER
+        from ..obs.profile import NULL_PROFILER
+        self.profiler = getattr(session, "profiler", None) or NULL_PROFILER
         # generation pinning (storage/deltas.py): the scheduler takes its
         # OWN pin on the session's current view at construction — every
         # round of every run() resolves loads, SNI counts, and plans
@@ -525,6 +527,10 @@ class QueryScheduler:
                         # separate from the OPAT batched evaluator's
                         self._traced_buckets.add(-Bpad)
                         ksp.set(first_call=True)
+                        self.profiler.attribute_kernel(
+                            ("scheduler.tmp", Bpad), seval, entry.part,
+                            entry.g2l, self.store.owner, stacked, n_steps,
+                            in_rows, in_step, in_valid, seeds)
                         with self.tracer.span("kernel.compile", bucket=Bpad):
                             res = seval(entry.part, entry.g2l,
                                         self.store.owner, stacked, n_steps,
@@ -534,6 +540,8 @@ class QueryScheduler:
                                     stacked, n_steps, in_rows, in_step,
                                     in_valid, seeds)
                     overflow = np.asarray(res.overflow)
+                    self.profiler.stamp_kernel(ksp, ("scheduler.tmp", Bpad))
+                    self.profiler.sample_device(ksp, self.store)
             comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
             out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
             out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
@@ -610,6 +618,10 @@ class QueryScheduler:
                 if Bpad not in self._traced_buckets:
                     self._traced_buckets.add(Bpad)
                     ksp.set(first_call=True)
+                    self.profiler.attribute_kernel(
+                        ("scheduler.opat", Bpad), beval, entry.part,
+                        entry.g2l, self.store.owner, stacked, n_steps,
+                        in_rows, in_step, in_valid, sf)
                     with self.tracer.span("kernel.compile", bucket=Bpad):
                         res = beval(entry.part, entry.g2l, self.store.owner,
                                     stacked, n_steps, in_rows, in_step,
@@ -619,6 +631,8 @@ class QueryScheduler:
                                 stacked, n_steps, in_rows, in_step,
                                 in_valid, sf)
                 overflow = np.asarray(res.overflow)
+                self.profiler.stamp_kernel(ksp, ("scheduler.opat", Bpad))
+                self.profiler.sample_device(ksp, self.store)
             comp_rows, comp_n = np.asarray(res.comp_rows), np.asarray(res.comp_n)
             out_rows, out_n = np.asarray(res.out_rows), np.asarray(res.out_n)
             out_step, out_dest = np.asarray(res.out_step), np.asarray(res.out_dest)
@@ -748,7 +762,11 @@ class QueryScheduler:
                             warm_loads=delta.warm_loads,
                             prefetch_hits=delta.prefetch_hits,
                             disk_reads=delta.disk_reads,
-                            read_ahead_hits=delta.read_ahead_hits),
+                            read_ahead_hits=delta.read_ahead_hits,
+                            bytes_cold=delta.bytes_cold,
+                            bytes_prefetched=delta.bytes_prefetched,
+                            bytes_disk=delta.bytes_disk,
+                            bytes_host=delta.bytes_host),
                         engine=self.session.engine_name,
                         extra={"state": j.state})
                 rep.stats.generation = gen

@@ -129,7 +129,8 @@ class GraphSession:
                  pg: Optional[PartitionedGraph] = None,
                  mesh: Optional[Any] = None,
                  catalog: Optional[Catalog] = None,
-                 tracer: Optional[Any] = None):
+                 tracer: Optional[Any] = None,
+                 profiler: Optional[Any] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         if pg is None:
@@ -163,6 +164,17 @@ class GraphSession:
         # untraced serving at pre-obs cost.
         from ..obs.trace import NULL_TRACER
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # resource profiling (obs/profile.py): defaults ON whenever a real
+        # tracer is attached — traced spans then carry memory/cost
+        # attributes — and to the no-op singleton otherwise; pass an
+        # explicit profiler (or NULL_PROFILER) to decouple the two
+        from ..obs.profile import NULL_PROFILER, ResourceProfiler
+        if profiler is not None:
+            self.profiler = profiler
+        elif self.tracer.enabled:
+            self.profiler = ResourceProfiler(self.tracer)
+        else:
+            self.profiler = NULL_PROFILER
         self.store: Optional[PartitionStore] = None
         # streaming updates (storage/deltas.py): a session built by
         # ``open`` owns the directory's writer handle and keeps one pinned
@@ -193,18 +205,19 @@ class GraphSession:
                                     host_cache_parts=self._host_cache_parts,
                                     host_cache_bytes=self._host_cache_bytes,
                                     read_ahead=self._read_ahead,
-                                    tracer=self.tracer)
+                                    tracer=self.tracer,
+                                    profiler=self.profiler)
         engine = self.engine_name
         if engine == "opat":
             from .opat import OPATEngine
             self.engine: QueryRunner = OPATEngine(
                 pg, self.config, store=self.store, prefetch=self._prefetch,
-                tracer=self.tracer)
+                tracer=self.tracer, profiler=self.profiler)
         elif engine == "traditional":
             from .traditional_mp import TraditionalMPEngine
             self.engine = TraditionalMPEngine(
                 pg, self._processors, self.config, store=self.store,
-                tracer=self.tracer)
+                tracer=self.tracer, profiler=self.profiler)
         else:
             from ..compat import make_part_mesh
             from .mapreduce_mp import MapReduceMPEngine
@@ -213,7 +226,8 @@ class GraphSession:
                 mesh = make_part_mesh(pg.k)
             self.engine = MapReduceMPEngine(
                 pg, mesh, self.config, heuristic=self.heuristic,
-                store=self.store, tracer=self.tracer)
+                store=self.store, tracer=self.tracer,
+                profiler=self.profiler)
 
         # per-partition workload profile, accumulated across submits.
         # MapReduceMP runs as one compiled program with no host loop: it
@@ -243,6 +257,10 @@ class GraphSession:
         self._slo_shed_reasons: Dict[str, int] = {}
         self._slo_latencies: Dict[str, List[float]] = {}
         self._slo_deadline: Dict[str, List[int]] = {}
+        # latest per-class burn-rate snapshot (obs/profile.SloBurnMonitor
+        # via record_serving): {cls: {window, misses, miss_fraction,
+        # burn_rate, error_budget}}
+        self._slo_burn: Dict[str, Dict[str, Any]] = {}
 
     # -- serving -----------------------------------------------------------
 
@@ -324,10 +342,14 @@ class GraphSession:
     def record_serving(self, *, counters: Dict[str, int],
                        shed_by_reason: Dict[str, int],
                        latencies: Dict[str, List[float]],
-                       deadline_met: Dict[str, List[bool]]) -> None:
+                       deadline_met: Dict[str, List[bool]],
+                       slo_burn: Optional[Dict[str, Dict[str, Any]]] = None
+                       ) -> None:
         """Fold one ``ServingFrontend.serve`` run's admission/shed counters
         and per-SLO-class latencies into the session's workload profile
-        (the ``"serving"`` block of ``workload_profile()``)."""
+        (the ``"serving"`` block of ``workload_profile()``).  ``slo_burn``
+        is the front end's rolling error-budget burn snapshot (kept as
+        latest-wins: the window is the monitor's, not the session's)."""
         for key, n in counters.items():
             self._slo_counters[key] = self._slo_counters.get(key, 0) + int(n)
         for reason, n in shed_by_reason.items():
@@ -341,6 +363,9 @@ class GraphSession:
             for ok in oks:
                 met[0] += int(bool(ok))
                 met[1] += 1
+        if slo_burn:
+            for cls, snap in slo_burn.items():
+                self._slo_burn[cls] = dict(snap)
 
     def submit_many(self, queries: Sequence[Union[Query, DisjunctiveQuery]],
                     max_answers: Union[None, int,
@@ -552,7 +577,8 @@ class GraphSession:
              seed: int = 0,
              mesh: Optional[Any] = None,
              verify_checksums: bool = True,
-             tracer: Optional[Any] = None) -> "GraphSession":
+             tracer: Optional[Any] = None,
+             profiler: Optional[Any] = None) -> "GraphSession":
         """Open a ``save``d graph directory as an *out-of-core* session.
 
         Partition shards stay on disk; the store serves them through a
@@ -581,7 +607,7 @@ class GraphSession:
                    host_cache_parts=host_cache_parts,
                    host_cache_bytes=host_cache_bytes, read_ahead=read_ahead,
                    processors=processors, prefetch=prefetch, seed=seed,
-                   mesh=mesh, tracer=tracer)
+                   mesh=mesh, tracer=tracer, profiler=profiler)
         sess._mdir = mdir
         sess._view = view
         # the directory's writes (append/compact/overlay rebuild) trace

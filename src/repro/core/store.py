@@ -97,6 +97,10 @@ class LoadStats:
                                  # read-ahead (the disk latency overlapped
                                  # evaluation instead of blocking a get)
     bytes_disk: int = 0          # bytes read off disk (demand + read-ahead)
+    bytes_host: int = 0          # bytes served out of the host LRU tier to
+                                 # device staging (every get: hit or demand
+                                 # read; structurally zero for the pinned
+                                 # in-RAM tier, which holds no LRU)
     host_evictions: int = 0      # host-LRU entries dropped to fit capacity
     delta_overlays: int = 0      # bundles rebuilt from a generation view's
                                  # pending delta overlay (stale pids staged
@@ -169,7 +173,8 @@ class PartitionStore:
                  host_cache_parts: Optional[int] = None,
                  host_cache_bytes: Optional[int] = None,
                  read_ahead: bool = True,
-                 tracer: Optional[Any] = None):
+                 tracer: Optional[Any] = None,
+                 profiler: Optional[Any] = None):
         if capacity_parts is not None and capacity_parts < 1:
             raise ValueError(f"capacity_parts must be >= 1, got {capacity_parts}")
         if capacity_bytes is not None and capacity_bytes < 1:
@@ -192,6 +197,10 @@ class PartitionStore:
         # no-op singleton so hot loops pay ~nothing when untraced
         from ..obs.trace import NULL_TRACER
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # resource profiling (obs/profile.py): device live-bytes sampled
+        # at span close; the no-op singleton when profiling is off
+        from ..obs.profile import NULL_PROFILER
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
         # the host tier the device cache stages from: the whole graph
         # pinned in RAM (no backing — pre-PR-5 behaviour), or a
         # disk-backed host LRU with background read-ahead (out of core)
@@ -379,6 +388,7 @@ class PartitionStore:
             self.stats.bytes_prefetched += entry.nbytes
             sp.set(nbytes=entry.nbytes)
             self._insert(entry, cache_key=vk)
+            self.profiler.sample_device(sp, self)
         return True
 
     # -- pinning (double-buffered streaming) --------------------------------
@@ -484,6 +494,7 @@ class PartitionStore:
                     sp.set(tier="prefetch")
                 else:
                     sp.set(tier="warm")
+                self.profiler.sample_device(sp, self)
                 return got
             sp.set(tier="cold")
             entry = self._stage(key, sharding=sharding)
@@ -492,6 +503,7 @@ class PartitionStore:
             sp.set(nbytes=entry.nbytes,
                    generation=self.current_generation)
             self._insert(entry, cache_key=ck)
+            self.profiler.sample_device(sp, self)
             return entry
 
     def _stage(self, key: StoreKey, sharding: Optional[Any]) -> StoreEntry:

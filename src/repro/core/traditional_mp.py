@@ -44,7 +44,8 @@ class TraditionalMPEngine:
     def __init__(self, pg: PartitionedGraph, n_processors: int,
                  cfg: Optional[EngineConfig] = None,
                  store: Optional[PartitionStore] = None,
-                 tracer=None):
+                 tracer=None,
+                 profiler=None):
         assert n_processors >= 1
         self.pg = pg
         self.p = n_processors
@@ -58,6 +59,8 @@ class TraditionalMPEngine:
         self.store = store if store is not None else PartitionStore(pg)
         from ..obs.trace import NULL_TRACER
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        from ..obs.profile import NULL_PROFILER
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
         self._eval_traced = False
 
     def shared_evaluator(self):
@@ -172,6 +175,12 @@ class TraditionalMPEngine:
                     if not self._eval_traced:
                         self._eval_traced = True
                         ksp.set(first_call=True)
+                        self.profiler.attribute_kernel(
+                            ("traditional", "veval"), self._veval,
+                            entry.part, entry.g2l, self.store.owner,
+                            plan_arrays, np.int32(plan.n_steps),
+                            in_rows, in_step, in_valid,
+                            np.asarray(seeds, dtype=bool))
                         with self.tracer.span("kernel.compile",
                                               engine="traditional"):
                             res = self._veval(entry.part, entry.g2l,
@@ -186,6 +195,8 @@ class TraditionalMPEngine:
                                           in_rows, in_step, in_valid,
                                           np.asarray(seeds, dtype=bool))
                     overflow = bool(np.any(np.asarray(res.overflow)))
+                    self.profiler.stamp_kernel(ksp, ("traditional", "veval"))
+                    self.profiler.sample_device(ksp, self.store)
             if overflow:
                 raise RuntimeError("evaluator buffer overflow; raise cap")
             comp_rows = np.asarray(res.comp_rows)
@@ -224,7 +235,11 @@ class TraditionalMPEngine:
                          warm_loads=delta.warm_loads,
                          prefetch_hits=delta.prefetch_hits,
                          disk_reads=delta.disk_reads,
-                         read_ahead_hits=delta.read_ahead_hits)
+                         read_ahead_hits=delta.read_ahead_hits,
+                         bytes_cold=delta.bytes_cold,
+                         bytes_prefetched=delta.bytes_prefetched,
+                         bytes_disk=delta.bytes_disk,
+                         bytes_host=delta.bytes_host)
         return TraditionalMPResult(answers=answers, stats=stats,
                                    state=st, partitions_per_iteration=per_iter)
 

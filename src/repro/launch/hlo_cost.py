@@ -64,6 +64,23 @@ _TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
+# new-style HLO (jit .lower().as_text(dialect="hlo")) prints operands
+# without the % sigil: "dot(Arg_0.1, Arg_0.1)"; the bare form is the
+# last identifier-like token of each comma-separated piece (shapes may
+# precede it in long-form dumps)
+_BARE_OPERAND_RE = re.compile(r"([\w.\-]+)\s*$")
+
+
+def _operand_names(operand_str: str) -> List[str]:
+    names = _OPERAND_RE.findall(operand_str)
+    if names or not operand_str.strip():
+        return names
+    out: List[str] = []
+    for piece in operand_str.split(","):
+        m = _BARE_OPERAND_RE.search(piece.strip())
+        if m:
+            out.append(m.group(1))
+    return out
 
 _ELEMENTWISE = {
     "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
@@ -149,7 +166,11 @@ def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
     for line in text.splitlines():
         if cur is None:
             h = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", line)
-            if h and "->" in line:
+            if not (h and "->" in line):
+                # new-style dumps open computations without the
+                # "(params) -> result" signature: "ENTRY main.24 {"
+                h = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\{\s*$", line)
+            if h:
                 cur = _Comp(h.group(2), [], {})
                 comps[cur.name] = cur
                 if h.group(1):
@@ -171,7 +192,7 @@ def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
         operand_str = after[: after.find(")")] if ")" in after else after
         ins = _Instr(name=name, opcode=opcode,
                      result_shapes=_SHAPE_RE.findall(head),
-                     operand_names=_OPERAND_RE.findall(operand_str),
+                     operand_names=_operand_names(operand_str),
                      line=rhs, is_root=is_root)
         cur.instrs.append(ins)
         cur.symbols[name] = ins

@@ -436,6 +436,7 @@ def main() -> None:
                 "rounds": slo_report.rounds,
                 "shed_policy": args.shed_policy,
                 "cost_model": fe.cost_model.snapshot(),
+                "slo_burn": slo_report.slo_burn,
             },
         }
     elif args.workload:
@@ -626,10 +627,14 @@ def main() -> None:
         # materialize/serialize it separately per output file
         profile = session.workload_profile()
         if args.json:
-            rep = {"schema_version": 2,
+            # schema_version 3: adds the "profile" resource block (memory
+            # peaks, per-kernel predicted costs, tier byte flows, SLO burn)
+            from repro.obs import resource_profile_snapshot
+            rep = {"schema_version": 3,
                    "queries": records,
                    "cache": cache,
                    "observability": observability_snapshot(tracer, registry),
+                   "profile": resource_profile_snapshot(session),
                    "workload_profile": profile}
             if session.mutable:
                 rep["generations"] = {

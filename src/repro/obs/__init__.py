@@ -12,6 +12,12 @@ Three modules, one contract (docs/observability.md):
                absorb the ad-hoc counters scattered across the store,
                host cache, delta layer, scheduler, and serving front
                end into one exportable namespace.
+  profile.py — ``ResourceProfiler``: memory accounting (device
+               live-bytes per span, session peak RSS/device), kernel
+               cost attribution (HLO FLOPs/bytes joined with measured
+               eval time via ``tools/trace_report.py --cost``), and
+               ``SloBurnMonitor`` rolling error-budget burn.  Disabled
+               path: ``NULL_PROFILER``, same discipline as the tracer.
   export.py  — three exporters: Chrome trace-event JSON (Perfetto),
                Prometheus text exposition, and a structured snapshot
                merged into serve's JSON report.
@@ -24,11 +30,15 @@ from .metrics import Counter, Gauge, Histogram, MetricsRegistry, \
     ingest_frontend, ingest_load_stats, ingest_schedule, ingest_session, \
     validate_residency
 from .trace import NULL_TRACER, NullTracer, Span, Tracer
+from .profile import NULL_PROFILER, NullResourceProfiler, \
+    ResourceProfiler, SloBurnMonitor, resource_profile_snapshot
 from .export import observability_snapshot, to_chrome_trace, \
     to_prometheus_text, write_chrome_trace, write_prometheus
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Span",
+    "ResourceProfiler", "NullResourceProfiler", "NULL_PROFILER",
+    "SloBurnMonitor", "resource_profile_snapshot",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "ingest_frontend", "ingest_load_stats", "ingest_schedule",
     "ingest_session", "validate_residency",

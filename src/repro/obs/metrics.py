@@ -194,6 +194,8 @@ _LOAD_STAT_METRICS = (
      "host gets served by a completed/in-flight read-ahead"),
     ("bytes_disk", "repro_store_bytes_disk_total",
      "bytes read off disk (demand + read-ahead)"),
+    ("bytes_host", "repro_store_host_bytes_total",
+     "bytes served out of the host LRU tier to device staging"),
     ("host_evictions", "repro_store_host_evictions_total",
      "host-LRU entries dropped to fit capacity"),
     ("delta_overlays", "repro_deltas_overlay_rebuilds_total",
@@ -255,6 +257,27 @@ def ingest_session(reg: MetricsRegistry, session: Any) -> None:
         reg.counter("repro_deltas_compactions_total",
                     help="log->shard folds published").set_total(
                         mdir.compactions)
+    backing = getattr(getattr(session, "store", None), "backing", None)
+    if backing is not None and hasattr(backing, "bytes_read"):
+        reg.counter("repro_store_disk_bytes_total",
+                    help="bytes the disk catalog deserialized (demand + "
+                         "read-ahead + overlay rebuild source reads)"
+                    ).set_total(backing.bytes_read)
+    prof = getattr(session, "profiler", None)
+    if prof is not None and getattr(prof, "enabled", False):
+        prof.observe_rss()
+        reg.gauge("repro_session_peak_rss_bytes",
+                  help="process peak RSS observed (ru_maxrss)").set(
+                      prof.peak_rss_bytes)
+        reg.gauge("repro_session_peak_device_bytes",
+                  help="peak live device bytes held by the partition "
+                       "store").set(prof.peak_device_bytes)
+    for cls, snap in sorted(getattr(session, "_slo_burn", {}).items()):
+        reg.gauge("repro_frontend_slo_burn_rate",
+                  help="rolling-window error-budget burn rate per SLO "
+                       "class (miss_fraction / error_budget; >1 means "
+                       "the budget burns faster than it accrues)",
+                  slo_class=cls).set(float(snap.get("burn_rate", 0.0)))
     if session._slo_counters or session._slo_shed_reasons:
         ingest_frontend(reg, session._slo_counters,
                         session._slo_shed_reasons)

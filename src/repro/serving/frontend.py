@@ -50,6 +50,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 from ..core.plan import generate_plan
 from ..core.query import DisjunctiveQuery, Query
+from ..obs.profile import SloBurnMonitor
 from .cost import CostEstimate, CostModel
 
 # shed_reason vocabulary (explicit, closed — the CI gate greps for these)
@@ -172,6 +173,10 @@ class FrontendReport:
     rounds: int
     wall_s: float
     schedule: Optional[object] = None    # plain path: the ScheduleReport
+    # per-class error-budget burn over the run's trailing window
+    # (obs/profile.SloBurnMonitor.snapshot(); empty on the plain path)
+    slo_burn: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def served(self) -> List[RequestOutcome]:
@@ -224,7 +229,10 @@ class ServingFrontend:
     (0.8 = keep 20% slack).  ``replay_speed`` scales workload arrival
     times to wall time (2.0 = replay twice as fast; <= 0 = instant, the
     deterministic default).  ``urgency_weight`` scales the slack-weighted
-    deadline pressure fed to the shared ranking.
+    deadline pressure fed to the shared ranking.  ``burn_window`` /
+    ``error_budget`` parameterize the per-class SLO burn-rate monitor
+    (obs/profile.SloBurnMonitor): every finite-deadline completion lands
+    in a rolling window and burn = miss_fraction / error_budget.
     """
 
     def __init__(self, session, *,
@@ -236,7 +244,9 @@ class ServingFrontend:
                  fairness_gamma: float = 0.0,
                  urgency_weight: float = 1.0,
                  headroom: float = 1.0,
-                 replay_speed: float = 0.0):
+                 replay_speed: float = 0.0,
+                 burn_window: int = 100,
+                 error_budget: float = 0.01):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"shed_policy must be one of {SHED_POLICIES}, "
                              f"got {shed_policy!r}")
@@ -255,6 +265,11 @@ class ServingFrontend:
         self.urgency_weight = float(urgency_weight)
         self.headroom = float(headroom)
         self.replay_speed = float(replay_speed)
+        # SLO burn-rate accounting (obs/profile.py): the rolling window of
+        # deadline outcomes per class and the error budget the window's
+        # miss fraction is charged against
+        self.burn_window = int(burn_window)
+        self.error_budget = float(error_budget)
 
     # -- the serving loop ---------------------------------------------------
 
@@ -318,6 +333,8 @@ class ServingFrontend:
         deferred: List[_Pending] = []
         next_arrival = 0
         rounds = 0
+        burn = SloBurnMonitor(window=self.burn_window,
+                              error_budget=self.error_budget)
 
         def vnow() -> float:
             """The virtual workload clock: wall time scaled by the replay
@@ -468,6 +485,10 @@ class ServingFrontend:
                 met = None
                 if slo is not None and not math.isinf(slo.deadline_s):
                     met = bool(latency <= slo.deadline_s)
+                    # only deadline outcomes burn budget: shed requests
+                    # never enter the window, inf-deadline classes have
+                    # no budget to burn
+                    burn.observe(slo.name, met)
                 counters["served"] += 1
                 outcomes[p.idx] = RequestOutcome(
                     name=p.req.query.name,
@@ -536,15 +557,17 @@ class ServingFrontend:
                   "p95_latency_s": _percentile(vals, 0.95),
                   "p99_latency_s": _percentile(vals, 0.99)}
             for cls, vals in sorted(latencies.items())}
+        slo_burn = burn.snapshot()
         session.record_serving(counters=counters,
                                shed_by_reason=shed_by_reason,
                                latencies=latencies,
-                               deadline_met=deadline_met)
+                               deadline_met=deadline_met,
+                               slo_burn=slo_burn)
         return FrontendReport(
             outcomes=[o for o in outcomes if o is not None],
             per_class=per_class, counters=counters,
             shed_by_reason=shed_by_reason, rounds=rounds,
-            wall_s=time.time() - t0)
+            wall_s=time.time() - t0, slo_burn=slo_burn)
 
 
 def requests_from_workload(

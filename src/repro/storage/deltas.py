@@ -402,8 +402,9 @@ class GenerationView:
             from .format import _shard_arrays
             with self.mdir.tracer.span("deltas.overlay_rebuild", pid=pid,
                                        generation=int(self.generation),
-                                       seq=int(self.seq_for(pid))):
+                                       seq=int(self.seq_for(pid))) as sp:
                 arrs = _shard_arrays(self._rebuilt, pid)
+                sp.set(nbytes=sum(int(a.nbytes) for a in arrs.values()))
         else:
             part, g2l = self.catalog.read_part(pid)
             arrs = dict(part)

@@ -370,6 +370,10 @@ class DiskCatalog:
             raise StorageFormatError("manifest partition list is not "
                                      f"0..{self.k - 1}")
         self._global: Optional[Dict[str, np.ndarray]] = None
+        # cumulative bytes this catalog read off disk (shard files, as
+        # stored — before geometry padding); obs/metrics.py exports it as
+        # repro_store_disk_bytes_total
+        self.bytes_read: int = 0
 
     # -- manifest-level metadata -------------------------------------------
 
@@ -501,6 +505,7 @@ class DiskCatalog:
         pid = int(pid)
         with np.load(self.shard_path(pid)) as z:
             arrs = {k: z[k] for k in z.files}
+        self.bytes_read += sum(int(a.nbytes) for a in arrs.values())
         if self.verify_checksums:
             want = self._parts[pid]["checksums"]
             for k, a in arrs.items():

@@ -170,6 +170,7 @@ class HostShardCache:
                 if key in self._prefetched:
                     self._prefetched.discard(key)
                     self.stats.read_ahead_hits += 1
+                self.stats.bytes_host += got.nbytes
                 return got
         # demand read: disk on the critical path
         with self.tracer.span("store.disk_read",
@@ -180,6 +181,7 @@ class HostShardCache:
             sp.set(nbytes=bundle.nbytes)
         with self._lock:
             self._insert(key, bundle)
+        self.stats.bytes_host += bundle.nbytes
         return bundle
 
     def read_ahead(self, key, loader=None) -> bool:

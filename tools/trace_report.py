@@ -20,15 +20,27 @@ can't answer:
       ``--why A B`` prints the term-by-term comparison at every round
       where both partitions were candidates.
 
+  "is the kernel near its roofline?" — ``kernel.eval`` spans carry the
+      cost attribution stamped by obs/profile.py (predicted FLOPs/bytes
+      from the bucket's lowered HLO plus the roofline-bound time);
+      ``--cost`` joins that prediction with the measured steady-state
+      wall time per compiled bucket: achieved FLOP/s, bound-vs-measured
+      ratio (% of roofline), and the live-device-byte watermark.  The
+      first call of each bucket (jit trace + compile) is excluded from
+      the steady-state mean.
+
 Modes:
     python tools/trace_report.py trace.json            # full report
     python tools/trace_report.py trace.json --why 3 1  # rank rationale
+    python tools/trace_report.py trace.json --cost     # kernel cost table
     python tools/trace_report.py trace.json --check    # CI gate
 
 ``--check`` exits non-zero unless the trace is non-empty, every span
 nests inside its recorded parent, every query root span is closed
-(non-zero duration once it has children), and every recorded heuristic
-choice is score-consistent.
+(non-zero duration once it has children), every recorded heuristic
+choice is score-consistent, and cost attribution is all-or-none: if any
+``kernel.eval`` span carries cost attrs, every one must (a partially
+attributed trace means a kernel call site skipped the profiler).
 """
 from __future__ import annotations
 
@@ -243,6 +255,82 @@ def report_admissions(decisions, top: int) -> None:
         print(f"  ... {len(recs) - top} more (raise --top)")
 
 
+_COST_ATTRS = ("kernel_key", "cost_flops", "cost_bytes",
+               "cost_t_bound_us", "cost_dominant")
+
+
+def _kernel_spans(spans):
+    return [sp for sp in spans if sp["name"] == "kernel.eval"]
+
+
+def report_cost(spans) -> None:
+    """Per-compiled-bucket cost attribution: measured steady-state wall
+    time joined with the predicted FLOPs/bytes/roofline bound the
+    profiler stamped on every ``kernel.eval`` span."""
+    groups: Dict[str, List[Dict[str, Any]]] = defaultdict(list)
+    for sp in _kernel_spans(spans):
+        key = sp.get("args", {}).get("kernel_key")
+        if key is not None:
+            groups[key].append(sp)
+    if not groups:
+        print("no cost-attributed kernel.eval spans (profiling off, or a "
+              "pre-PR-10 trace)")
+        return
+    print(f"== kernel cost attribution ({len(groups)} compiled buckets) ==")
+    print(f"  {'bucket':<20} {'calls':>5} {'steady ms':>10} "
+          f"{'pred GFLOP':>10} {'pred GB':>8} {'achieved':>12} "
+          f"{'roofline%':>9}  bound   {'peak dev MB':>11}")
+    for key in sorted(groups):
+        sps = groups[key]
+        steady = [sp for sp in sps
+                  if not sp.get("args", {}).get("first_call")]
+        timed = steady if steady else sps  # single-call bucket: use it
+        mean_us = sum(sp.get("dur", 0.0) for sp in timed) / len(timed)
+        a = sps[0].get("args", {})
+        flops = float(a.get("cost_flops", 0.0))
+        nbytes = float(a.get("cost_bytes", 0.0))
+        bound_us = float(a.get("cost_t_bound_us", 0.0))
+        dominant = a.get("cost_dominant", "?")
+        # achieved throughput from the measured mean; roofline% is how
+        # close measurement came to the model's bound (100% = at the
+        # bound; <100% = overhead the roofline doesn't model)
+        gflops = (flops / mean_us) / 1e3 if mean_us > 0 else 0.0
+        roof = 100.0 * bound_us / mean_us if mean_us > 0 else 0.0
+        live = max((float(sp.get("args", {}).get("device_live_bytes", 0.0))
+                    for sp in sps), default=0.0)
+        print(f"  {key:<20} {len(sps):>5} {mean_us / 1e3:>10.3f} "
+              f"{flops / 1e9:>10.3f} {nbytes / 1e9:>8.3f} "
+              f"{gflops:>8.2f} GF/s {roof:>8.2f}%  {dominant:<7}"
+              f"{live / 1e6:>11.2f}")
+    errs = sorted({(k, g[0].get("args", {}).get("cost_error"))
+                   for k, g in groups.items()
+                   if g[0].get("args", {}).get("cost_error")})
+    for k, e in errs:
+        print(f"  !! {k}: attribution failed ({e}) — costs read 0")
+
+
+def check_cost_attribution(spans) -> List[str]:
+    """All-or-none: once any ``kernel.eval`` span carries cost attrs,
+    every one must — a partially stamped trace means one of the engines'
+    kernel call sites bypassed the profiler."""
+    kspans = _kernel_spans(spans)
+    attributed = [sp for sp in kspans
+                  if sp.get("args", {}).get("kernel_key") is not None]
+    if not attributed:
+        return []
+    problems = []
+    for sp in kspans:
+        a = sp.get("args", {})
+        missing = [k for k in _COST_ATTRS if k not in a]
+        if missing:
+            problems.append(
+                f"kernel.eval span {a.get('span_id')} "
+                f"(engine={a.get('engine')}) lacks cost attrs "
+                f"{missing} while {len(attributed)} other kernel spans "
+                f"are attributed")
+    return problems
+
+
 def check(trace) -> int:
     """CI gate: 0 iff the trace is non-empty, well-nested, every query
     span closed, and every recorded ranking score-consistent."""
@@ -280,6 +368,7 @@ def check(trace) -> int:
                           f"({sp.get('args', {}).get('query')}) has "
                           f"children but zero duration (never closed?)")
     errors.extend(verify_rankings(decisions))
+    errors.extend(check_cost_attribution(spans))
     if errors:
         for e in errors[:20]:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -303,6 +392,10 @@ def main() -> None:
     ap.add_argument("--why", nargs=2, metavar=("A", "B"),
                     help="explain why partition A was ranked before B "
                          "(term-by-term score comparison per round)")
+    ap.add_argument("--cost", action="store_true",
+                    help="per-kernel cost attribution table: measured "
+                         "steady-state time vs the predicted FLOPs/bytes/"
+                         "roofline bound stamped by the resource profiler")
     ap.add_argument("--query", default="",
                     help="only decompose queries whose name contains this")
     ap.add_argument("--top", type=int, default=10,
@@ -315,10 +408,17 @@ def main() -> None:
     if args.why:
         report_why(trace["decisions"], args.why[0], args.why[1])
         return
+    if args.cost:
+        report_cost(trace["spans"])
+        return
     spans = trace["spans"]
     _, children = index_spans(spans)
     report_queries(spans, children, args.top, args.query)
     report_aggregate(spans)
+    if any(sp.get("args", {}).get("kernel_key") is not None
+           for sp in _kernel_spans(spans)):
+        print()
+        report_cost(spans)
     report_rankings(trace["decisions"], args.top)
     report_admissions(trace["decisions"], args.top)
     problems = verify_rankings(trace["decisions"])
